@@ -1,0 +1,57 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def artifact_path(*parts: str) -> str:
+    path = os.path.join(ARTIFACTS, *parts)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    return path
+
+
+def save_json(name: str, payload: Any) -> str:
+    path = artifact_path(name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def load_dryrun_records() -> List[Dict[str, Any]]:
+    d = os.path.join(ARTIFACTS, "dryrun")
+    out = []
+    if os.path.isdir(d):
+        for fn in sorted(os.listdir(d)):
+            if fn.endswith(".json"):
+                with open(os.path.join(d, fn)) as f:
+                    out.append(json.load(f))
+    return out
+
+
+def timed_us(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def pct(new: float, ref: float) -> float:
+    return (new / ref - 1.0) * 100.0
+
+
+class Row:
+    """CSV row in the repo's ``name,us_per_call,derived`` convention."""
+
+    def __init__(self, name: str, us_per_call: float, derived: str):
+        self.name, self.us, self.derived = name, us_per_call, derived
+
+    def __str__(self) -> str:
+        return f"{self.name},{self.us:.2f},{self.derived}"

@@ -1,0 +1,122 @@
+"""Paper Fig. 3 (+ JTT / Fig. 4 data): cluster-scale scheduler comparison.
+
+Runs the same production-like trace through default FIFO, FIFO_packed,
+Gandiva, EaCO (and the beyond-paper EaCO-occ) on a 28-node (constrained)
+and 64-node (over-provisioned) cluster, reporting total energy and average
+job runtime normalized to the default — the paper's Fig. 3 — plus JTT and
+average active nodes (Fig. 4's summary statistic).
+
+Reproduction targets (§6.2):
+  64-node: EaCO energy -39% vs all three baselines; active nodes -47%.
+  28-node: EaCO energy -39%/-24.5%/-8.3% vs default/FIFO_packed/Gandiva;
+           avg runtime +<3.23%; avg JTT up to -97% vs default.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import Row, save_json
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import TraceConfig, generate_trace, load_into
+from repro.core.baselines import FIFO, FIFOPacked, Gandiva
+from repro.core.candidates import Thresholds
+from repro.core.eaco import EaCO, EaCOOcc
+
+# Regimes (the paper's trace is unpublished; these are calibrated so that
+# 28 nodes are demand-constrained while 64 are over-provisioned, plus a
+# saturated burst regime for the paper's "up to 97% JTT" end of the range).
+REGIMES = {
+    "constrained_28": dict(
+        n_nodes=28,
+        trace=TraceConfig(n_jobs=160, arrival_rate_per_hour=4.0, seed=7, mix="paper"),
+        paper_targets={"energy_vs_fifo": -39.0, "energy_vs_packed": -24.5,
+                       "energy_vs_gandiva": -8.3, "runtime_max_pct": 3.23},
+    ),
+    "overprovisioned_64": dict(
+        n_nodes=64,
+        trace=TraceConfig(n_jobs=160, arrival_rate_per_hour=4.0, seed=7, mix="paper"),
+        paper_targets={"energy_vs_fifo": -39.0, "active_nodes_pct": -47.0},
+    ),
+    "saturated_28": dict(
+        n_nodes=28,
+        trace=TraceConfig(n_jobs=220, arrival_rate_per_hour=10.0, seed=7, mix="paper"),
+        paper_targets={"jtt_range_pct": (-97.0, -4.9)},
+    ),
+}
+
+SCHEDULERS = {
+    "fifo": FIFO,
+    "fifo_packed": FIFOPacked,
+    "gandiva": Gandiva,
+    # max_residents=2 is the inflation-minimizing configuration that meets
+    # the paper's <3.23% runtime bound; EaCO-occ shows deeper packing.
+    "eaco": lambda: EaCO(thresholds=Thresholds(util=75.0, mem=80.0, max_residents=2)),
+    "eaco-occ": EaCOOcc,
+}
+
+
+_MEMO: Dict[str, Dict] = {}
+
+
+def run_cluster(n_nodes: int, trace_cfg: TraceConfig) -> Dict[str, Dict]:
+    key = f"{n_nodes}|{trace_cfg}"
+    if key in _MEMO:
+        return _MEMO[key]
+    trace = generate_trace(trace_cfg)
+    out: Dict[str, Dict] = {}
+    for name, mk in SCHEDULERS.items():
+        sim = Simulator(SimConfig(n_nodes=n_nodes, seed=trace_cfg.seed), mk())
+        load_into(sim, trace)
+        sim.run(until=20_000)
+        out[name] = sim.results()
+        out[name]["active_node_samples"] = sim.active_node_samples
+    _MEMO[key] = out
+    return out
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    payload = {}
+    for regime, spec in REGIMES.items():
+        t0 = time.perf_counter()
+        res = run_cluster(spec["n_nodes"], spec["trace"])
+        us = (time.perf_counter() - t0) * 1e6
+        ref = res["fifo"]
+        block = {}
+        for name, r in res.items():
+            block[name] = {
+                "energy_kwh": round(r["total_energy_kwh"], 1),
+                "energy_norm": round(r["total_energy_kwh"] / ref["total_energy_kwh"], 4),
+                "runtime_norm": round(r["avg_jct_h"] / ref["avg_jct_h"], 4),
+                "jtt_norm": round(r["avg_jtt_h"] / ref["avg_jtt_h"], 4),
+                "avg_active_nodes": round(r["avg_active_nodes"], 1),
+                "deadline_violations": r["deadline_violations"],
+                "undo_count": r["undo_count"],
+            }
+        payload[regime] = {
+            "schedulers": block,
+            "paper_targets": spec["paper_targets"],
+        }
+        e = block["eaco"]
+        rows.append(
+            Row(
+                f"fig3/{regime}",
+                us,
+                f"eaco_energy={100*(e['energy_norm']-1):+.1f}%vsFIFO "
+                f"(vs packed {100*(block['eaco']['energy_kwh']/block['fifo_packed']['energy_kwh']-1):+.1f}%"
+                f", vs gandiva {100*(block['eaco']['energy_kwh']/block['gandiva']['energy_kwh']-1):+.1f}%) "
+                f"runtime={100*(e['runtime_norm']-1):+.2f}% jtt={100*(e['jtt_norm']-1):+.1f}% "
+                f"nodes={e['avg_active_nodes']}/{block['fifo']['avg_active_nodes']} "
+                f"| eaco-occ E={100*(block['eaco-occ']['energy_norm']-1):+.1f}% "
+                f"jtt={100*(block['eaco-occ']['jtt_norm']-1):+.1f}%",
+            )
+        )
+    save_json("fig3.json", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

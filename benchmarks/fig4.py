@@ -1,0 +1,71 @@
+"""Paper Fig. 4: active-node timelines per scheduler (28 / 64 nodes).
+
+Plots (as ASCII + JSON artifact) the number of powered-on nodes over time.
+Reproduction targets: the default scheduler holds the maximum node count;
+EaCO reduces the average by ~30% (28-node) / ~47% (64-node).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, save_json
+from benchmarks.fig3 import REGIMES, run_cluster
+
+
+def _sparkline(samples, n_nodes, width=60) -> str:
+    if not samples:
+        return ""
+    t_max = samples[-1][0] or 1.0
+    buckets = [0.0] * width
+    counts = [0] * width
+    for t, a in samples:
+        i = min(int(t / t_max * (width - 1)), width - 1)
+        buckets[i] += a
+        counts[i] += 1
+    chars = " .:-=+*#%@"
+    out = []
+    for b, c in zip(buckets, counts):
+        v = (b / c / n_nodes) if c else 0.0
+        out.append(chars[min(int(v * (len(chars) - 1)), len(chars) - 1)])
+    return "".join(out)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    payload = {}
+    for regime in ("constrained_28", "overprovisioned_64"):
+        spec = REGIMES[regime]
+        t0 = time.perf_counter()
+        res = run_cluster(spec["n_nodes"], spec["trace"])
+        us = (time.perf_counter() - t0) * 1e6
+        block = {}
+        fifo_avg = res["fifo"]["avg_active_nodes"]
+        for name, r in res.items():
+            samples = r.pop("active_node_samples")
+            block[name] = {
+                "avg_active_nodes": round(r["avg_active_nodes"], 2),
+                "reduction_vs_fifo_pct": round(
+                    100 * (r["avg_active_nodes"] / fifo_avg - 1), 1
+                ),
+                "timeline": [[round(t, 1), a] for t, a in samples[:: max(1, len(samples) // 200)]],
+            }
+            print(f"fig4/{regime}/{name:12s} |{_sparkline(samples, spec['n_nodes'])}| "
+                  f"avg={r['avg_active_nodes']:.1f}")
+        payload[regime] = block
+        rows.append(
+            Row(
+                f"fig4/{regime}",
+                us,
+                f"eaco_nodes={block['eaco']['reduction_vs_fifo_pct']:+.1f}%vsFIFO "
+                f"(paper -30%@28 / -47%@64)",
+            )
+        )
+    save_json("fig4.json", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,45 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table1   — paper Table 1/2 (single-job power/energy, model vs paper)
+  fig1     — paper Fig. 1 / Tables 3-4 (co-location energy & JCT)
+  fig3     — paper Fig. 3 (cluster energy/runtime, 3 regimes x 5 schedulers)
+  fig4     — paper Fig. 4 (active-node timelines)
+  roofline — §Roofline terms per (arch x shape x mesh) from the dry-run
+  kernels  — Pallas kernel micro-benches + interpret-mode correctness
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (
+        fig1, fig3, fig4, kernels_bench, roofline_bench, table1, tpu_cluster,
+    )
+
+    modules = [
+        ("table1", table1),
+        ("fig1", fig1),
+        ("fig3", fig3),
+        ("fig4", fig4),
+        ("tpu_cluster", tpu_cluster),
+        ("roofline", roofline_bench),
+        ("kernels", kernels_bench),
+    ]
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.00,ERROR: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 1 + Table 2: single-job power / energy / JCT / utilization.
+
+Validates the calibrated power model and job profiles against the paper's
+exclusive-allocation measurements: simulated energy within a few percent of
+the published kWh for each of the four CV jobs.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, save_json
+from repro.cluster.job import paper_profiles
+from repro.cluster.power import PAPER_SINGLE, v100_power_model
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    power = v100_power_model()
+    profiles = paper_profiles()
+    payload = {}
+    t0 = time.perf_counter()
+    for name, prof in profiles.items():
+        paper_p, paper_e, paper_jct, *_ = PAPER_SINGLE[name]
+        sim_p = power.node_power(prof.gpu_util)
+        sim_e = power.energy_kwh(prof.gpu_util, prof.base_jct_hours)
+        err_p = (sim_p / paper_p - 1) * 100
+        err_e = (sim_e / paper_e - 1) * 100
+        payload[name] = {
+            "paper_power_w": paper_p,
+            "model_power_w": round(sim_p, 1),
+            "power_err_pct": round(err_p, 2),
+            "paper_energy_kwh": paper_e,
+            "model_energy_kwh": round(sim_e, 2),
+            "energy_err_pct": round(err_e, 2),
+            "jct_h": prof.base_jct_hours,
+            "gpu_util": prof.gpu_util,
+            "mem_util": prof.mem_util,
+        }
+        rows.append(
+            Row(
+                f"table1/{name}",
+                0.0,
+                f"P={sim_p:.0f}W(paper {paper_p:.0f} {err_p:+.1f}%) "
+                f"E={sim_e:.1f}kWh(paper {paper_e} {err_e:+.1f}%)",
+            )
+        )
+    us = (time.perf_counter() - t0) * 1e6 / len(profiles)
+    for r in rows:
+        r.us = us
+    save_json("table1.json", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,76 @@
+"""Co-location dynamics: epoch-time inflation and utilization composition.
+
+Calibrated directly from the paper's measurements (§3, §6.1):
+
+  * utilizations of co-located jobs compose ~additively (Table 4 vs Table 2:
+    within +-5% across all six measured sets), capped at 100%;
+  * epoch-time inflation: 3-4% for 2-way, ~8% for 3-way, ~19-24% for 4-way
+    sharing (Fig. 1b / Table 3), plus a proportional slowdown once the
+    summed compute demand exceeds the device (sum-util cap);
+  * the measured sets from Table 3 are seeded verbatim into EaCO's history
+    H, exactly as the paper initializes H "with experimental measurements"
+    (Alg. 1 line 1).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, Sequence, Tuple
+
+from repro.cluster.job import JobProfile
+from repro.cluster.power import PAPER_COLOCATED, PAPER_SINGLE
+
+# measured epoch-time inflation by co-location degree (derived from Table 3
+# against the Table 1 singles: 0.407/0.395, 0.425/0.393, and the paper's
+# stated 19% JCT inflation for 4-way sharing)
+INFLATION_BY_DEGREE: Dict[int, float] = {1: 1.0, 2: 1.035, 3: 1.082, 4: 1.20}
+# beyond the calibrated range: each extra co-resident adds ~8% switch cost
+EXTRA_PER_JOB = 0.08
+
+
+def combined_gpu_util(profiles: Sequence[JobProfile]) -> float:
+    """Additive composition with saturation (Table 4 behaviour)."""
+    return min(100.0, sum(p.gpu_util for p in profiles))
+
+
+def combined_mem_util(profiles: Sequence[JobProfile]) -> float:
+    return min(100.0, sum(p.mem_util for p in profiles))
+
+
+def combined_peak_mem(profiles: Sequence[JobProfile]) -> float:
+    return min(100.0, sum(p.peak_mem_util for p in profiles))
+
+
+def inflation_factor(profiles: Sequence[JobProfile]) -> float:
+    """Epoch-time multiplier for a co-located set.
+
+    degree term (hardware context-switch overhead) x compute-oversubscription
+    term (jobs cannot jointly exceed the device's duty cycle).
+    """
+    k = len(profiles)
+    if k <= 1:
+        return 1.0
+    if k in INFLATION_BY_DEGREE:
+        base = INFLATION_BY_DEGREE[k]
+    else:
+        base = INFLATION_BY_DEGREE[4] + EXTRA_PER_JOB * (k - 4)
+    demand = sum(p.gpu_util for p in profiles) / 100.0
+    return base * max(1.0, demand)
+
+
+def epoch_hours_colocated(job: JobProfile, others: Sequence[JobProfile]) -> float:
+    return job.epoch_hours * inflation_factor([job, *others])
+
+
+def set_signature(profiles: Iterable[JobProfile]) -> Tuple[str, ...]:
+    return tuple(sorted(p.name for p in profiles))
+
+
+def paper_measured_inflation(signature: Tuple[str, ...]) -> float | None:
+    """Ground-truth inflation for the sets the paper measured (Table 3)."""
+    row = PAPER_COLOCATED.get(tuple(sorted(signature)))
+    if row is None:
+        return None
+    epoch_co = row[3]
+    singles = [PAPER_SINGLE[n][3] for n in signature]
+    return epoch_co / (sum(singles) / len(singles))

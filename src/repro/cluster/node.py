@@ -1,0 +1,92 @@
+"""Cluster node model: 8 accelerators, power states, GPU-granular residency."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.cluster import colocation
+from repro.cluster.job import Job, JobProfile
+from repro.cluster.power import PowerModel
+
+
+class NodeState:
+    ON = "on"
+    SLEEP = "sleep"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class Node:
+    id: int
+    n_gpus: int = 8
+    state: str = NodeState.ON
+    # per-GPU resident job ids
+    gpu_residents: List[Set[int]] = dataclasses.field(default_factory=list)
+    # energy accounting
+    energy_kwh: float = 0.0
+    last_account_time: float = 0.0
+    # degraded (straggler) multiplier on epoch times
+    slowdown: float = 1.0
+
+    def __post_init__(self):
+        if not self.gpu_residents:
+            self.gpu_residents = [set() for _ in range(self.n_gpus)]
+
+    # -- residency ---------------------------------------------------------
+
+    def resident_job_ids(self) -> Set[int]:
+        out: Set[int] = set()
+        for g in self.gpu_residents:
+            out |= g
+        return out
+
+    def residents_on(self, gpu_ids: Sequence[int]) -> Set[int]:
+        out: Set[int] = set()
+        for g in gpu_ids:
+            out |= self.gpu_residents[g]
+        return out
+
+    def add_job(self, job: Job, gpu_ids: Sequence[int]) -> None:
+        for g in gpu_ids:
+            self.gpu_residents[g].add(job.id)
+
+    def remove_job(self, job: Job) -> None:
+        for g in self.gpu_residents:
+            g.discard(job.id)
+
+    def is_idle(self) -> bool:
+        return not self.resident_job_ids()
+
+    # -- utilization / power -------------------------------------------------
+
+    def gpu_util(self, jobs: Dict[int, Job], gpu: int) -> float:
+        profs = [jobs[j].profile for j in self.gpu_residents[gpu]]
+        return colocation.combined_gpu_util(profs)
+
+    def gpu_mem_util(self, jobs: Dict[int, Job], gpu: int, peak: bool = True) -> float:
+        profs = [jobs[j].profile for j in self.gpu_residents[gpu]]
+        return (
+            colocation.combined_peak_mem(profs)
+            if peak
+            else colocation.combined_mem_util(profs)
+        )
+
+    def node_util(self, jobs: Dict[int, Job]) -> float:
+        if self.n_gpus == 0:
+            return 0.0
+        return sum(self.gpu_util(jobs, g) for g in range(self.n_gpus)) / self.n_gpus
+
+    def account_energy(self, now: float, jobs: Dict[int, Job], power: PowerModel):
+        dt = now - self.last_account_time
+        if dt > 0:
+            if self.state == NodeState.SLEEP:
+                p = power.sleep_w
+            elif self.state == NodeState.FAILED:
+                p = 0.0
+            elif self.is_idle():
+                p = power.idle_w
+            else:
+                p = power.node_power(self.node_util(jobs))
+            self.energy_kwh += p * dt / 1000.0
+        self.last_account_time = now

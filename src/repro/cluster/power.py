@@ -1,0 +1,109 @@
+"""Node power models, calibrated against the paper's measurements.
+
+The V100 model reproduces EaCO's Tables 1-4 (8xV100 + 2x Xeon 6240 nodes):
+a concave quadratic P(U) fitted by least squares over all ten measured
+(utilization, power) points — four exclusive jobs (Table 1+2) and six
+co-located sets (Table 3+4).  Concavity is physical: with hardware context
+switching roughly one job's kernels occupy the SMs at any instant, so
+marginal power flattens as utilization saturates (the paper's 4-job point:
+96.6% util at 1944 W versus a linear extrapolation of ~2400 W).
+
+The TPU v5e model follows the same functional form with the constants in
+``repro.roofline.hw`` (this framework's deployment target); utilization for
+TPU jobs is the MFU-style duty cycle from the dry-run artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.roofline import hw
+
+# --- paper calibration data (Tables 1-4) -----------------------------------
+
+# job profiles measured on an exclusive 8xV100 node
+# name: (power_W, energy_kWh, jct_h, epoch_h, mem_avg, mem_max, gpu_avg, gpu_max)
+PAPER_SINGLE: Dict[str, Tuple[float, ...]] = {
+    "alexnet": (712, 24.73, 34.76, 0.39, 1.73, 4.21, 4.72, 11.0),
+    "resnet18": (959, 33.69, 35.13, 0.39, 6.07, 14.63, 11.17, 27.29),
+    "resnet50": (1330, 47.87, 36.01, 0.40, 22.29, 43.92, 36.61, 72.04),
+    "vgg16": (1533, 55.38, 36.13, 0.40, 30.03, 51.29, 48.01, 81.5),
+}
+
+# co-located sets: (power_W, energy_kWh, avg_jct_h, avg_epoch_h,
+#                   mem_avg, mem_max, gpu_avg, gpu_max)
+PAPER_COLOCATED: Dict[Tuple[str, ...], Tuple[float, ...]] = {
+    ("alexnet", "resnet50"): (1390, 50.93, 36.63, 0.407, 22.66, 46.25, 40.25, 76.67),
+    ("alexnet", "vgg16"): (1506, 54.97, 36.51, 0.406, 31.26, 52.96, 55.16, 87.75),
+    ("resnet18", "vgg16"): (1644, 60.84, 37.01, 0.411, 34.85, 52.54, 61.06, 93.46),
+    ("alexnet", "resnet18", "resnet50"): (1541, 59.01, 38.28, 0.425, 27.77, 55.88, 52.24, 91.88),
+    ("alexnet", "resnet18", "vgg16"): (1713, 65.55, 38.26, 0.425, 35.83, 52.75, 66.99, 93.96),
+    # Table 3 reports "-" for the 4-way epoch time (switching was no longer
+    # sequential); 0.4887 is derived from its measured avg JCT:
+    # 44.21 h / 35.51 h (mean single JCT) x 0.3925 h (mean single epoch).
+    ("alexnet", "resnet18", "resnet50", "vgg16"): (1944, 93.66, 44.21, 0.4887, 43.46, 52.54, 96.64, 100.0),
+}
+
+
+def _fit_quadratic() -> Tuple[float, float, float]:
+    """Least-squares concave quadratic P(U) over the 10 measured points."""
+    pts: List[Tuple[float, float]] = []
+    for vals in PAPER_SINGLE.values():
+        pts.append((vals[6], vals[0]))
+    for vals in PAPER_COLOCATED.values():
+        pts.append((vals[6], vals[0]))
+    u = np.array([p[0] for p in pts])
+    p = np.array([p[1] for p in pts])
+    A = np.stack([np.ones_like(u), u, u * u], axis=1)
+    coef, *_ = np.linalg.lstsq(A, p, rcond=None)
+    return float(coef[0]), float(coef[1]), float(coef[2])
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    """P(U) = a + b*U + c*U^2 (clamped at the calibrated peak), plus node
+    housekeeping states."""
+
+    a: float
+    b: float
+    c: float
+    idle_w: float  # powered-on, no residents
+    sleep_w: float  # low-power state (EaCO's consolidation payoff)
+    max_util: float = 100.0
+
+    def node_power(self, gpu_util: float) -> float:
+        u = min(max(gpu_util, 0.0), self.max_util)
+        return self.a + self.b * u + self.c * u * u
+
+    def energy_kwh(self, gpu_util: float, hours: float) -> float:
+        return self.node_power(gpu_util) * hours / 1000.0
+
+
+def v100_power_model() -> PowerModel:
+    a, b, c = _fit_quadratic()
+    return PowerModel(a=a, b=b, c=c, idle_w=a, sleep_w=75.0)
+
+
+def tpu_v5e_power_model(chips_per_node: int = hw.CHIPS_PER_HOST) -> PowerModel:
+    """Same concave form, v5e constants: interpolates idle->peak with a mild
+    saturation matched to the V100 fit's curvature ratio."""
+    idle = hw.HOST_IDLE_W + chips_per_node * hw.CHIP_IDLE_W
+    peak = hw.HOST_PEAK_W + chips_per_node * hw.CHIP_PEAK_W
+    # quadratic through (0, idle) and (100, peak) with the V100 curvature
+    # ratio c*100/b preserved
+    _, bv, cv = _fit_quadratic()
+    ratio = cv * 100.0 / bv  # < 0 (concave)
+    b = (peak - idle) / (100.0 * (1 + ratio))
+    c = b * ratio / 100.0
+    return PowerModel(a=idle, b=b, c=c, idle_w=idle, sleep_w=0.15 * idle)
+
+
+def paper_energy_single(job: str) -> float:
+    return PAPER_SINGLE[job][1]
+
+
+def paper_energy_colocated(jobs: Tuple[str, ...]) -> float:
+    return PAPER_COLOCATED[tuple(sorted(jobs))][1]

@@ -1,0 +1,327 @@
+"""Discrete-event cluster simulator (the Gavel role in the paper's §6.2).
+
+Event kinds: job arrival, epoch boundary, job completion, node failure /
+repair, scheduler retries.  Job progress is piecewise-linear in time: every
+allocation change re-rates the affected jobs (epoch time = exclusive epoch
+time x co-location inflation x node slowdown), so energy and JCT respond to
+co-location exactly as the calibrated model dictates.
+
+The simulator is scheduler-agnostic: schedulers (EaCO and the three paper
+baselines) hook arrival / epoch / completion events and mutate allocation
+through the public ``allocate`` / ``deallocate`` API, which keeps energy
+accounting and progress re-rating consistent for every policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.cluster import colocation
+from repro.cluster.job import Job, JobProfile, JobState
+from repro.cluster.node import Node, NodeState
+from repro.cluster.power import PowerModel, v100_power_model
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    payload: Any = dataclasses.field(compare=False, default=None)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_nodes: int = 28
+    gpus_per_node: int = 8
+    # prediction noise: true inflation = model x (1 + U(-eps, +eps))
+    prediction_noise: float = 0.10
+    seed: int = 0
+    # failures
+    node_mtbf_hours: float = 0.0  # 0 = disabled
+    node_repair_hours: float = 2.0
+    straggler_prob: float = 0.0  # probability a repaired/initial node is slow
+    straggler_factor: float = 1.5
+    # bookkeeping
+    active_node_sample_hours: float = 1.0
+
+
+class Simulator:
+    def __init__(
+        self,
+        cfg: SimConfig,
+        scheduler,
+        power: Optional[PowerModel] = None,
+    ):
+        self.cfg = cfg
+        self.scheduler = scheduler
+        self.power = power or v100_power_model()
+        self.rng = np.random.Generator(np.random.PCG64(cfg.seed))
+        self.now = 0.0
+        self._seq = 0
+        self._heap: List[_Event] = []
+        self.nodes = [Node(i, cfg.gpus_per_node) for i in range(cfg.n_nodes)]
+        self.jobs: Dict[int, Job] = {}
+        self.queue: List[int] = []  # arrival-ordered job ids awaiting allocation
+        # per-job rate bookkeeping
+        self._rate: Dict[int, float] = {}  # epochs/hour
+        self._last_progress_t: Dict[int, float] = {}
+        self._epoch_event_ver: Dict[int, int] = {}
+        # true inflation noise per (signature) — deterministic
+        self._true_noise: Dict[Tuple[str, ...], float] = {}
+        # metrics
+        self.active_node_samples: List[Tuple[float, int]] = []
+        self.deadline_violations: int = 0
+        self.events_processed = 0
+        self._dirty = False
+        self._done_count = 0
+
+    # ------------------------------------------------------------------ util
+
+    def push(self, time: float, kind: str, payload: Any = None) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, _Event(time, self._seq, kind, payload))
+
+    def true_inflation(self, profiles: Sequence[JobProfile]) -> float:
+        """Ground truth the simulator runs on: calibrated model + job-set
+        noise (the reality EaCO's observation phase discovers)."""
+        base = colocation.inflation_factor(profiles)
+        if len(profiles) <= 1:
+            return base
+        sig = colocation.set_signature(profiles)
+        measured = colocation.paper_measured_inflation(sig)
+        if measured is not None:
+            return measured  # the paper's own measured sets are exact
+        if sig not in self._true_noise:
+            # deterministic per signature ACROSS processes (python's hash()
+            # is salted per interpreter — zlib.crc32 is stable)
+            import zlib
+
+            h = zlib.crc32(repr((sig, self.cfg.seed)).encode()) % 10_000 / 10_000.0
+            self._true_noise[sig] = (h * 2 - 1) * self.cfg.prediction_noise
+        return base * (1 + self._true_noise[sig])
+
+    # ------------------------------------------------------------ allocation
+
+    def _coresidents(self, job: Job) -> List[Job]:
+        node = self.nodes[job.node_id]
+        ids = node.residents_on(job.gpu_ids)
+        return [self.jobs[i] for i in ids]
+
+    def _rerate(self, node: Node) -> None:
+        """Recompute rates for every resident of ``node`` after a change."""
+        for jid in node.resident_job_ids():
+            job = self.jobs[jid]
+            self._advance_progress(job)
+            others = [j for j in self._coresidents(job)]
+            infl = self.true_inflation([j.profile for j in others])
+            epoch_h = job.profile.epoch_hours * infl * node.slowdown
+            self._rate[jid] = 1.0 / epoch_h
+            self._schedule_epoch_event(job)
+
+    def _advance_progress(self, job: Job) -> None:
+        t0 = self._last_progress_t.get(job.id, self.now)
+        if job.id in self._rate and self.now > t0:
+            job.epochs_done = min(
+                job.profile.epochs, job.epochs_done + self._rate[job.id] * (self.now - t0)
+            )
+        self._last_progress_t[job.id] = self.now
+
+    def _schedule_epoch_event(self, job: Job) -> None:
+        self._epoch_event_ver[job.id] = self._epoch_event_ver.get(job.id, 0) + 1
+        rate = self._rate.get(job.id)
+        if not rate:
+            return
+        nxt = math.floor(job.epochs_done + 1e-9) + 1
+        target = min(float(nxt), float(job.profile.epochs))
+        dt = max(target - job.epochs_done, 0.0) / rate
+        self.push(
+            self.now + dt,
+            "epoch",
+            {"job": job.id, "ver": self._epoch_event_ver[job.id]},
+        )
+
+    def allocate(self, job: Job, node_id: int, gpu_ids: Sequence[int]) -> None:
+        node = self.nodes[node_id]
+        self._account_node(node)
+        if node.state == NodeState.SLEEP:
+            node.state = NodeState.ON  # wake on demand
+        job.node_id = node_id
+        job.gpu_ids = tuple(gpu_ids)
+        if job.start_time is None:
+            job.start_time = self.now
+        job.state = JobState.RUNNING
+        node.add_job(job, gpu_ids)
+        if job.id in self.queue:
+            self.queue.remove(job.id)
+        self._last_progress_t[job.id] = self.now
+        self._rerate(node)
+
+    def deallocate(self, job: Job, to_queue: bool = True, checkpoint: bool = True) -> None:
+        """Remove a job from its node (EaCO undo / failure / completion).
+
+        ``checkpoint``: keep whole-epoch progress (the paper's epoch-boundary
+        checkpointing); otherwise progress since the last epoch is lost too.
+        """
+        node = self.nodes[job.node_id]
+        self._account_node(node)
+        self._advance_progress(job)
+        node.remove_job(job)
+        job.checkpointed_epochs = int(math.floor(job.epochs_done + 1e-9))
+        job.epochs_done = float(job.checkpointed_epochs)
+        self._rate.pop(job.id, None)
+        self._epoch_event_ver[job.id] = self._epoch_event_ver.get(job.id, 0) + 1
+        job.node_id = None
+        job.gpu_ids = ()
+        if to_queue:
+            job.state = JobState.QUEUED
+            # undo returns to the FRONT (it already waited its turn)
+            self.queue.insert(0, job.id)
+        self._rerate(node)
+        self._dirty = True
+        self.scheduler.on_node_freed(self, node)
+
+    def _account_node(self, node: Node) -> None:
+        node.account_energy(self.now, self.jobs, self.power)
+
+    def account_all(self) -> None:
+        for n in self.nodes:
+            self._account_node(n)
+
+    # ---------------------------------------------------------------- events
+
+    def add_job(self, profile: JobProfile, arrival: float, deadline: float) -> Job:
+        job = Job(id=len(self.jobs), profile=profile, arrival=arrival, deadline=deadline)
+        self.jobs[job.id] = job
+        self.push(arrival, "arrival", {"job": job.id})
+        return job
+
+    def run(self, until: Optional[float] = None) -> None:
+        if self.cfg.node_mtbf_hours > 0:
+            for n in self.nodes:
+                self._schedule_failure(n)
+        self.push(0.0, "sample", None)
+        self._done_count = sum(1 for j in self.jobs.values() if j.state == JobState.DONE)
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if until is not None and ev.time > until:
+                break
+            self.now = ev.time
+            self.events_processed += 1
+            getattr(self, f"_ev_{ev.kind}")(ev.payload)
+            # reschedule only when allocation-relevant state changed — epoch
+            # ticks alone cannot unblock a queued job (thresholds move on
+            # completion/undo/repair), and scanning candidates on every epoch
+            # event is O(queue x gpus) in Python.
+            if self._dirty:
+                self._dirty = False
+                self.scheduler.try_schedule(self)
+            if self._done_count == len(self.jobs):
+                break
+        self.account_all()
+
+    def _ev_sample(self, _):
+        active = sum(1 for n in self.nodes if n.state == NodeState.ON)
+        self.active_node_samples.append((self.now, active))
+        if any(j.state != JobState.DONE for j in self.jobs.values()):
+            self.push(self.now + self.cfg.active_node_sample_hours, "sample", None)
+
+    def _ev_arrival(self, payload):
+        job = self.jobs[payload["job"]]
+        self.queue.append(job.id)
+        self._dirty = True
+        self.scheduler.on_arrival(self, job)
+
+    def _ev_epoch(self, payload):
+        job = self.jobs[payload["job"]]
+        if payload["ver"] != self._epoch_event_ver.get(job.id):
+            return  # stale (rates changed since scheduling)
+        if job.state not in (JobState.RUNNING, JobState.OBSERVING):
+            return
+        node = self.nodes[job.node_id]
+        self._account_node(node)
+        self._advance_progress(job)
+        job.checkpointed_epochs = int(math.floor(job.epochs_done + 1e-9))
+        if job.epochs_done >= job.profile.epochs - 1e-9:
+            self._complete(job)
+        else:
+            self.scheduler.on_epoch(self, job)
+            self._schedule_epoch_event(job)
+
+    def _complete(self, job: Job) -> None:
+        node = self.nodes[job.node_id]
+        self._account_node(node)
+        node.remove_job(job)
+        self._rate.pop(job.id, None)
+        job.state = JobState.DONE
+        job.finish_time = self.now
+        self._done_count += 1
+        self._dirty = True
+        if job.finish_time > job.deadline:
+            self.deadline_violations += 1
+        job.node_id = None
+        self._rerate(node)
+        self.scheduler.on_complete(self, job)
+        self.scheduler.on_node_freed(self, node)
+
+    # --------------------------------------------------------------- failures
+
+    def _schedule_failure(self, node: Node) -> None:
+        dt = float(self.rng.exponential(self.cfg.node_mtbf_hours))
+        self.push(self.now + dt, "failure", {"node": node.id})
+
+    def _ev_failure(self, payload):
+        node = self.nodes[payload["node"]]
+        if node.state == NodeState.FAILED:
+            return
+        self._account_node(node)
+        victims = [self.jobs[i] for i in node.resident_job_ids()]
+        for job in victims:
+            # involuntary undo: resume from the last epoch checkpoint
+            self.deallocate(job, to_queue=True, checkpoint=True)
+            job.restart_count += 1
+        node.state = NodeState.FAILED
+        self.push(self.now + self.cfg.node_repair_hours, "repair", {"node": node.id})
+
+    def _ev_repair(self, payload):
+        node = self.nodes[payload["node"]]
+        self._account_node(node)
+        node.state = NodeState.ON
+        self._dirty = True
+        node.slowdown = (
+            self.cfg.straggler_factor
+            if self.rng.random() < self.cfg.straggler_prob
+            else 1.0
+        )
+        if self.cfg.node_mtbf_hours > 0:
+            self._schedule_failure(node)
+
+    def _ev_retry(self, _):
+        pass  # try_schedule runs after every event of this kind
+
+    # ---------------------------------------------------------------- results
+
+    def results(self) -> Dict[str, Any]:
+        done = [j for j in self.jobs.values() if j.state == JobState.DONE]
+        total_e = sum(n.energy_kwh for n in self.nodes)
+        act = [a for _, a in self.active_node_samples]
+        return {
+            "total_energy_kwh": total_e,
+            "jobs_done": len(done),
+            "jobs_total": len(self.jobs),
+            "avg_jct_h": float(np.mean([j.jct() for j in done])) if done else 0.0,
+            "avg_jtt_h": float(np.mean([j.jtt() for j in done])) if done else 0.0,
+            "avg_wait_h": float(np.mean([j.start_time - j.arrival for j in done]))
+            if done
+            else 0.0,
+            "makespan_h": max((j.finish_time for j in done), default=0.0),
+            "avg_active_nodes": float(np.mean(act)) if act else 0.0,
+            "deadline_violations": self.deadline_violations,
+            "undo_count": sum(j.undo_count for j in self.jobs.values()),
+            "restart_count": sum(j.restart_count for j in self.jobs.values()),
+        }

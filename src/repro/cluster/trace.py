@@ -1,0 +1,60 @@
+"""Production-like job traces for the simulator (§6.2 methodology)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.job import Job, JobProfile, lm_profiles, paper_profiles
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    n_jobs: int = 100
+    arrival_rate_per_hour: float = 2.0  # Poisson
+    seed: int = 0
+    # deadline tiers: (probability, slack factor over exclusive JCT);
+    # slack inf = no SLO (paper: "some jobs may have no explicit SLO")
+    deadline_tiers: Tuple[Tuple[float, float], ...] = (
+        (0.2, 1.15),  # tight SLO
+        (0.5, 2.0),  # relaxed (e.g. "within 12 hours" class)
+        (0.3, math.inf),  # batch, no SLO
+    )
+    mix: str = "paper"  # "paper" (4 CV jobs) | "lm" | "mixed"
+    diurnal: bool = False  # modulate arrivals day/night
+
+
+def profile_pool(mix: str) -> List[JobProfile]:
+    if mix == "paper":
+        return list(paper_profiles().values())
+    if mix == "lm":
+        return list(lm_profiles().values())
+    return list(paper_profiles().values()) + list(lm_profiles().values())
+
+
+def generate_trace(cfg: TraceConfig) -> List[Tuple[JobProfile, float, float]]:
+    """Returns [(profile, arrival_h, deadline_h)]."""
+    rng = np.random.Generator(np.random.PCG64(cfg.seed))
+    pool = profile_pool(cfg.mix)
+    out = []
+    t = 0.0
+    probs = np.array([p for p, _ in cfg.deadline_tiers])
+    slacks = [s for _, s in cfg.deadline_tiers]
+    for _ in range(cfg.n_jobs):
+        rate = cfg.arrival_rate_per_hour
+        if cfg.diurnal:
+            rate *= 1.5 if (t % 24.0) < 12.0 else 0.5
+        t += float(rng.exponential(1.0 / rate))
+        prof = pool[int(rng.integers(len(pool)))]
+        slack = slacks[int(rng.choice(len(slacks), p=probs / probs.sum()))]
+        deadline = t + slack * prof.base_jct_hours if math.isfinite(slack) else math.inf
+        out.append((prof, t, deadline))
+    return out
+
+
+def load_into(sim, trace: Sequence[Tuple[JobProfile, float, float]]) -> None:
+    for prof, arrival, deadline in trace:
+        sim.add_job(prof, arrival, deadline)

@@ -1,0 +1,44 @@
+"""Assigned architecture configs (public-literature geometries).
+
+Importing this package registers all architectures in ``base.REGISTRY``.
+"""
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeSpec,
+    all_configs,
+    get_config,
+    input_specs,
+    smoke_config,
+)
+
+# side-effect registration
+from repro.configs import (  # noqa: F401
+    internvl2_2b,
+    minitron_8b,
+    qwen3_32b,
+    internlm2_20b,
+    h2o_danube_1_8b,
+    deepseek_v3_671b,
+    deepseek_v2_lite_16b,
+    mamba2_370m,
+    seamless_m4t_large_v2,
+    jamba_1_5_large_398b,
+)
+
+ASSIGNED = [
+    "internvl2-2b",
+    "minitron-8b",
+    "qwen3-32b",
+    "internlm2-20b",
+    "h2o-danube-1.8b",
+    "deepseek-v3-671b",
+    "deepseek-v2-lite-16b",
+    "mamba2-370m",
+    "seamless-m4t-large-v2",
+    "jamba-1.5-large-398b",
+]

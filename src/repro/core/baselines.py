@@ -1,0 +1,164 @@
+"""The paper's three comparison schedulers (§6.2).
+
+``default`` — plain FIFO: strictly arrival-ordered, exclusive full-node
+allocation, head-of-line blocking, never sleeps nodes.
+
+``fifo_packed`` — FIFO that packs onto the least-loaded eligible node when
+no exclusive node is free (memory-checked), never sleeps nodes.
+
+``gandiva`` — introspective greedy packer modeled after Xiao et al. (OSDI
+'18) as the paper evaluates it: prefers exclusive allocation; under
+contention packs two jobs by lowest combined utilization; monitors progress
+and un-packs when the measured rate degrades past a threshold.  Energy
+oblivious (no sleep states).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.cluster import colocation
+from repro.cluster.job import Job, JobState
+from repro.cluster.node import Node, NodeState
+
+
+class _Base:
+    sleeps_idle_nodes = False
+
+    def on_arrival(self, sim, job: Job) -> None:
+        pass
+
+    def on_epoch(self, sim, job: Job) -> None:
+        pass
+
+    def on_complete(self, sim, job: Job) -> None:
+        pass
+
+    def on_node_freed(self, sim, node: Node) -> None:
+        pass
+
+    def _free_node(self, sim) -> Optional[Node]:
+        for node in sim.nodes:
+            if node.state == NodeState.ON and node.is_idle():
+                return node
+        return None
+
+    def _alloc_whole_node(self, sim, job: Job, node: Node) -> None:
+        sim.allocate(job, node.id, tuple(range(job.profile.n_gpus)))
+
+
+class FIFO(_Base):
+    """The paper's ``default``: exclusive, arrival order, blocking."""
+
+    name = "fifo"
+
+    def try_schedule(self, sim) -> None:
+        while sim.queue:
+            job = sim.jobs[sim.queue[0]]
+            node = self._free_node(sim)
+            if node is None:
+                return  # head-of-line blocks
+            self._alloc_whole_node(sim, job, node)
+
+
+class FIFOPacked(_Base):
+    """FIFO + packing when there is no free node."""
+
+    name = "fifo_packed"
+    max_residents = 4
+    mem_threshold = 90.0
+
+    def try_schedule(self, sim) -> None:
+        progressed = True
+        while progressed and sim.queue:
+            progressed = False
+            job = sim.jobs[sim.queue[0]]
+            node = self._free_node(sim)
+            if node is not None:
+                self._alloc_whole_node(sim, job, node)
+                progressed = True
+                continue
+            # pack onto the least-loaded node that fits
+            best, best_util = None, None
+            for node in sim.nodes:
+                if node.state != NodeState.ON:
+                    continue
+                residents = node.resident_job_ids()
+                if len(residents) >= self.max_residents:
+                    continue
+                profs = [sim.jobs[i].profile for i in residents] + [job.profile]
+                if colocation.combined_peak_mem(profs) > self.mem_threshold:
+                    continue
+                u = node.node_util(sim.jobs)
+                if best is None or u < best_util:
+                    best, best_util = node, u
+            if best is not None:
+                self._alloc_whole_node(sim, job, best)
+                progressed = True
+
+
+class Gandiva(_Base):
+    """Introspective packing (profile-driven, energy-oblivious)."""
+
+    name = "gandiva"
+    max_residents = 2
+    util_budget = 100.0
+    mem_threshold = 90.0
+    unpack_rate_threshold = 0.70  # un-pack if measured rate < 70% exclusive
+
+    def __init__(self):
+        self._packed: Dict[int, float] = {}  # job id -> rate when packed
+
+    def try_schedule(self, sim) -> None:
+        progressed = True
+        while progressed and sim.queue:
+            progressed = False
+            for jid in list(sim.queue):
+                job = sim.jobs[jid]
+                if job.state != JobState.QUEUED:
+                    continue
+                node = self._free_node(sim)
+                if node is not None:
+                    self._alloc_whole_node(sim, job, node)
+                    progressed = True
+                    continue
+                best, best_u = None, None
+                for n in sim.nodes:
+                    if n.state != NodeState.ON:
+                        continue
+                    residents = n.resident_job_ids()
+                    if not residents or len(residents) >= self.max_residents:
+                        continue
+                    profs = [sim.jobs[i].profile for i in residents] + [job.profile]
+                    u = sum(p.gpu_util for p in profs)
+                    if u > self.util_budget:
+                        continue
+                    if colocation.combined_peak_mem(profs) > self.mem_threshold:
+                        continue
+                    if best is None or u < best_u:
+                        best, best_u = n, u
+                if best is not None:
+                    self._alloc_whole_node(sim, job, best)
+                    self._packed[job.id] = 0.0
+                    progressed = True
+
+    def on_epoch(self, sim, job: Job) -> None:
+        # introspection: un-pack a job whose measured progress rate degraded
+        if job.id not in self._packed or job.node_id is None:
+            return
+        node = sim.nodes[job.node_id]
+        residents = node.resident_job_ids()
+        if len(residents) <= 1:
+            return
+        profs = [sim.jobs[i].profile for i in residents]
+        measured = sim.true_inflation(profs)
+        if 1.0 / measured < self.unpack_rate_threshold:
+            job.undo_count += 1
+            sim.deallocate(job, to_queue=True, checkpoint=True)
+
+
+ALL_SCHEDULERS = {
+    "fifo": FIFO,
+    "fifo_packed": FIFOPacked,
+    "gandiva": Gandiva,
+}

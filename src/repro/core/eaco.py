@@ -1,0 +1,197 @@
+"""EaCO: Energy-aware CO-allocating algorithm (the paper's Algorithm 1).
+
+Flow per queued job j (Schedule(j)):
+  1. ``FindCandidates`` -> list L of GPU sets meeting j's requirements and
+     the utilization/memory thresholds (Alg. 2);
+  2. inner loop: take the candidate with the HIGHEST utilization (pack the
+     hottest node so cold nodes can sleep), ``PredictJCT`` for all jobs
+     co-located there + j; allocate only if every deadline holds (Eq. 2);
+  3. early-stage observation: keep j tentative until one epoch has passed
+     for every co-located job since allocation; refine the JCT estimate
+     from the *measured* rates, record the measurement into H;
+  4. if the refined estimate violates any deadline, UNDO at the epoch
+     boundary (progress is checkpointed) and retry from step 2 with the
+     failed set excluded; otherwise finalize.
+
+Energy action: idle nodes transition to the low-power state; candidates may
+include sleeping nodes (woken on allocation).  Both behaviours are what the
+paper's §4/§6.2 attribute EaCO's energy savings to.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.cluster.job import Job, JobState
+from repro.cluster.node import Node, NodeState
+from repro.core.candidates import Candidate, Thresholds, find_candidates
+from repro.core.history import History
+from repro.core.predictor import JCTPredictor
+
+
+@dataclasses.dataclass
+class _Observation:
+    node_id: int
+    gpu_ids: Tuple[int, ...]
+    epochs_at_alloc: Dict[int, int]  # job id -> whole epochs when j arrived
+    failed_sets: Set[Tuple[int, Tuple[int, ...]]]
+
+
+class EaCO:
+    """Scheduler implementing the paper's Algorithm 1."""
+
+    name = "eaco"
+    sleeps_idle_nodes = True
+
+    def __init__(
+        self,
+        thresholds: Optional[Thresholds] = None,
+        history: Optional[History] = None,
+        alpha: float = 0.5,
+    ):
+        self.thresholds = thresholds or Thresholds()
+        self.history = history if history is not None else History()
+        self.predictor = JCTPredictor(self.history)
+        self.alpha = alpha
+        self._obs: Dict[int, _Observation] = {}  # job id -> observation state
+        self._failed: Dict[int, Set[Tuple[int, Tuple[int, ...]]]] = {}
+
+    # ------------------------------------------------------------- selection
+
+    def _rank(self, candidates: List[Candidate]) -> List[Candidate]:
+        """Highest utilization first (Alg. 1 line 5)."""
+        return sorted(candidates, key=lambda c: -c.utilization)
+
+    def _admit(self, sim, job: Job, cand: Candidate) -> bool:
+        residents = [sim.jobs[i] for i in cand.resident_ids]
+        node = sim.nodes[cand.node_id]
+        return self.predictor.deadlines_met(
+            sim.now, [job, *residents], node.slowdown
+        )
+
+    def schedule_job(self, sim, job: Job) -> bool:
+        """One pass of Alg. 1's nested loops for job j. True if allocated."""
+        failed = self._failed.setdefault(job.id, set())
+        cands = [
+            c
+            for c in find_candidates(sim, job, self.thresholds)
+            if (c.node_id, c.gpu_ids) not in failed
+        ]
+        for cand in self._rank(cands):
+            if not self._admit(sim, job, cand):
+                continue
+            node = sim.nodes[cand.node_id]
+            sim.allocate(job, cand.node_id, cand.gpu_ids)
+            if cand.resident_ids:
+                # tentative: observe one epoch of every co-located job
+                job.state = JobState.OBSERVING
+                self._obs[job.id] = _Observation(
+                    node_id=cand.node_id,
+                    gpu_ids=cand.gpu_ids,
+                    epochs_at_alloc={
+                        i: sim.jobs[i].checkpointed_epochs
+                        for i in (*cand.resident_ids, job.id)
+                    },
+                    failed_sets=failed,
+                )
+            return True
+        return False
+
+    # ------------------------------------------------------------ sim hooks
+
+    def on_arrival(self, sim, job: Job) -> None:
+        pass  # try_schedule drains the queue after every event
+
+    def try_schedule(self, sim) -> None:
+        progressed = True
+        while progressed:
+            progressed = False
+            for jid in list(sim.queue):
+                job = sim.jobs[jid]
+                if job.state != JobState.QUEUED:
+                    continue
+                if self.schedule_job(sim, job):
+                    progressed = True
+        self._sleep_idle(sim)
+
+    def on_epoch(self, sim, job: Job) -> None:
+        # check every observation window that involves job's node
+        node_id = job.node_id
+        for jid, obs in list(self._obs.items()):
+            if obs.node_id != node_id:
+                continue
+            self._check_observation(sim, sim.jobs[jid], obs)
+
+    def _check_observation(self, sim, job: Job, obs: _Observation) -> None:
+        node = sim.nodes[obs.node_id]
+        involved = [sim.jobs[i] for i in obs.epochs_at_alloc]
+        # "until one epoch has passed for all co-located jobs" (line 12)
+        for other in involved:
+            if other.state == JobState.DONE:
+                continue
+            if other.checkpointed_epochs < obs.epochs_at_alloc[other.id] + 1:
+                return  # keep observing
+        # measured rates: record into H (line 13), re-estimate JCT (line 14)
+        live = [o for o in involved if o.state != JobState.DONE]
+        profiles = [o.profile for o in live]
+        measured_inflation = sim.true_inflation(profiles)
+        from repro.cluster import colocation
+
+        self.history.record(colocation.set_signature(profiles), measured_inflation)
+        ok = True
+        for o in live:
+            exclusive_finish = sim.now + o.remaining_epochs * o.profile.epoch_hours
+            if exclusive_finish > o.deadline:
+                continue  # hopeless SLO either way: undoing cannot help
+            epoch_h = o.profile.epoch_hours * measured_inflation * node.slowdown
+            if sim.now + o.remaining_epochs * epoch_h > o.deadline:
+                ok = False
+                break
+        del self._obs[job.id]
+        if ok:
+            job.state = JobState.RUNNING  # finalize (line 16)
+        else:
+            # undo at the epoch boundary (lines 18-19): progress stays at the
+            # last checkpoint; the failed set is excluded and j retries
+            job.undo_count += 1
+            obs.failed_sets.add((obs.node_id, obs.gpu_ids))
+            sim.deallocate(job, to_queue=True, checkpoint=True)
+
+    def on_complete(self, sim, job: Job) -> None:
+        self._obs.pop(job.id, None)
+        self._failed.pop(job.id, None)
+
+    def on_node_freed(self, sim, node: Node) -> None:
+        pass  # sleep handled in try_schedule
+
+    def _sleep_idle(self, sim) -> None:
+        if not self.sleeps_idle_nodes:
+            return
+        for node in sim.nodes:
+            if node.state == NodeState.ON and node.is_idle():
+                node.account_energy(sim.now, sim.jobs, sim.power)
+                node.state = NodeState.SLEEP
+
+
+class EaCOOcc(EaCO):
+    """Beyond-paper variant (§4.2's suggestion): occupancy-style headroom.
+
+    Uses the duty-cycle headroom rather than the conservative utilization
+    threshold — admits deeper co-location (degree 6, 95% threshold) and
+    ranks candidates by predicted marginal cost (Eq. 1) instead of raw
+    utilization.
+    """
+
+    name = "eaco-occ"
+
+    def __init__(self, history: Optional[History] = None, alpha: float = 0.5):
+        super().__init__(
+            thresholds=Thresholds(util=95.0, mem=90.0, max_residents=6),
+            history=history,
+            alpha=alpha,
+        )
+
+    def _rank(self, candidates: List[Candidate]) -> List[Candidate]:
+        # deeper packing first, then hottest
+        return sorted(candidates, key=lambda c: (-c.degree, -c.utilization))

@@ -1,0 +1,66 @@
+"""History H of experimental measurements (EaCO Alg. 1, line 1).
+
+Maps a co-location signature (sorted job-family names) to the measured
+epoch-time inflation factor.  Seeded with the paper's own experiments
+(Tables 1-4) and grown online from early-stage observations; persists to
+JSON so accumulated measurements survive across scheduler runs — "a larger
+data history allows it to make faster and more accurate estimates" (§5).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, Optional, Tuple
+
+from repro.cluster import colocation
+from repro.cluster.power import PAPER_COLOCATED
+
+Signature = Tuple[str, ...]
+
+
+class History:
+    def __init__(self, seed_with_paper: bool = True):
+        self._data: Dict[Signature, float] = {}
+        self.hits = 0
+        self.misses = 0
+        if seed_with_paper:
+            for sig in PAPER_COLOCATED:
+                measured = colocation.paper_measured_inflation(sig)
+                if measured is not None:
+                    self._data[tuple(sorted(sig))] = measured
+
+    def get(self, signature: Iterable[str]) -> Optional[float]:
+        key = tuple(sorted(signature))
+        if len(key) <= 1:
+            return 1.0
+        val = self._data.get(key)
+        if val is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return val
+
+    def record(self, signature: Iterable[str], inflation: float) -> None:
+        key = tuple(sorted(signature))
+        if len(key) > 1:
+            self._data[key] = inflation
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"|".join(k): v for k, v in self._data.items()}, f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "History":
+        h = cls(seed_with_paper=True)
+        if os.path.exists(path):
+            with open(path) as f:
+                for k, v in json.load(f).items():
+                    h._data[tuple(k.split("|"))] = float(v)
+        return h

@@ -1,0 +1,58 @@
+"""PredictJCT (EaCO Alg. 1, line 6).
+
+Prediction sources, in order of trust:
+  1. history H (measured inflation for this exact co-location signature),
+  2. the analytic co-location model (utilization-additive with degree
+     overhead — §3's "noticeable trends"),
+with the early-stage observation phase correcting either after one epoch.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster import colocation
+from repro.cluster.job import Job, JobProfile
+from repro.core.history import History
+
+
+class JCTPredictor:
+    def __init__(self, history: History):
+        self.history = history
+
+    def predict_inflation(self, profiles: Sequence[JobProfile]) -> float:
+        if len(profiles) <= 1:
+            return 1.0
+        sig = colocation.set_signature(profiles)
+        measured = self.history.get(sig)
+        if measured is not None:
+            return measured
+        return colocation.inflation_factor(profiles)
+
+    def predict_finish(
+        self, now: float, job: Job, co_profiles: Sequence[JobProfile],
+        node_slowdown: float = 1.0,
+    ) -> float:
+        """Absolute predicted completion time of ``job`` when co-located
+        with ``co_profiles`` (which must include job's own profile)."""
+        infl = self.predict_inflation(co_profiles)
+        epoch_h = job.profile.epoch_hours * infl * node_slowdown
+        return now + job.remaining_epochs * epoch_h
+
+    def deadlines_met(
+        self, now: float, jobs: Sequence[Job], node_slowdown: float = 1.0
+    ) -> bool:
+        """Eq. (2): every co-located job must meet its deadline.
+
+        A job whose deadline is unmeetable even under exclusive allocation
+        (it aged out while queued) is admitted best-effort — otherwise it
+        would starve forever; its violation is still counted by the sim.
+        """
+        profiles = [j.profile for j in jobs]
+        for j in jobs:
+            exclusive_finish = now + j.remaining_epochs * j.profile.epoch_hours
+            if exclusive_finish > j.deadline:
+                continue  # hopeless SLO: best-effort, don't block placement
+            if self.predict_finish(now, j, profiles, node_slowdown) > j.deadline:
+                return False
+        return True

@@ -1,0 +1,142 @@
+"""Flash attention Pallas TPU kernel (causal / GQA / sliding-window).
+
+Tiling: grid = (batch x q_heads, Sq/bq, Sk/bk); the kv axis is the
+innermost (sequential on TPU) grid dimension, so the online-softmax state
+(m, l, acc) lives in VMEM scratch carried across kv steps.  Block shapes
+keep the working set in VMEM: q (bq, d) + k/v (bk, d) + acc (bq, d) fp32 —
+with bq = bk = 128 and d <= 256 that is < 1 MiB, far under the ~16 MiB/core
+budget, and the (bq, bk) score tile feeds the MXU at its native 128x128.
+
+GQA is handled in the index maps (q head h reads kv head h // rep) — the
+repeated KV is never materialized.  Sliding-window masking composes with
+the causal mask; tiles that the causal/window structure fully masks are
+skipped via ``pl.when`` (no MXU work, no VMEM traffic).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,  # (1, 1, bq, d), (1, 1, bk, d), (1, 1, bk, d)
+    o_ref,  # (1, 1, bq, d)
+    m_ref, l_ref, acc_ref,  # VMEM scratch: (bq, 1), (bq, 1), (bq, d) fp32
+    *,
+    bq: int,
+    bk: int,
+    nk: int,
+    causal: bool,
+    window: Optional[int],
+    scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    q_start = qi * bq
+    k_start = ki * bk
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip tiles that are fully masked by causal/window structure
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= k_start <= q_start + bq - 1
+    if window is not None:
+        needed &= k_start + bk - 1 > q_start - window
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)  # rows with no valid keys stay 0
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    rep = H // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, "seq must divide block size"
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(D)
+
+    def q_map(bh, qi, ki):
+        return (bh // H, bh % H, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return (bh // H, (bh % H) // rep, ki, 0)
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, nk=nk, causal=causal, window=window, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), q_map),
+            pl.BlockSpec((1, 1, bk, D), kv_map),
+            pl.BlockSpec((1, 1, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately naive (materialize the full score matrix, full-seq
+recurrences in fp32) — small-shape references the kernels must match, NOT
+the production XLA paths in ``repro.models`` (which are themselves chunked).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, D) one new token per sequence
+    k: jax.Array,  # (B, S, Hkv, D) cache
+    v: jax.Array,
+    valid_len: jax.Array,  # scalar int32
+) -> jax.Array:
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    kh = jnp.repeat(k, rep, axis=2) if rep > 1 else k  # (B, S, H, D)
+    vh = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kh.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    mask = jnp.arange(S)[None, None, :] < valid_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, vh.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P) dt-scaled inputs
+    log_dA: jax.Array,  # (B, S, H) fp32
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (step-by-step) SSD recurrence — the exact ground truth."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    bh = jnp.repeat(Bm, rep, axis=2) if rep > 1 else Bm  # (B,S,H,N)
+    ch = jnp.repeat(Cm, rep, axis=2) if rep > 1 else Cm
+
+    def step(h, inp):
+        xt, at, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        h = h * jnp.exp(at)[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt.astype(jnp.float32), xt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (
+        x.swapaxes(0, 1),
+        log_dA.swapaxes(0, 1),
+        bh.swapaxes(0, 1),
+        ch.swapaxes(0, 1),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h_final  # (B,S,H,P), (B,H,N,P)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)

@@ -1,0 +1,57 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+One pass over the rows: mean-of-squares reduction + rsqrt + scale fused in
+VMEM (XLA emits this as 2+ HBM passes when the cast back to bf16 blocks
+fusion).  Grid over row blocks; feature dim stays whole in VMEM (d_model
+<= 8192 fp32 = 32 KiB/row, so a (block_rows, d) tile fits comfortably).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * s_ref[...]).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,  # (..., d)
+    scale: jax.Array,  # (d,)
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    # pad rows to a multiple of the block
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    n = x2.shape[0] // br
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

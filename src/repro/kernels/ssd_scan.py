@@ -1,0 +1,118 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Implements the state-space-dual blocked algorithm: per (batch, head)
+program, the chunk axis is the innermost (sequential) grid dimension and
+the running state h (N x P fp32) lives in VMEM scratch; each chunk does
+
+  intra:  y += (C B^T * decay-gate) x        (Q x Q MXU tile)
+  inter:  y += (C h_prev) * exp(L)
+  state:  h  = exp(L_Q) h_prev + (B * seg)^T x
+
+with Q = chunk length (e.g. 256), so VMEM holds Q x max(N, P, Q) fp32
+tiles (~1 MiB) and the HBM traffic is one pass over x/B/C per layer — the
+property that makes SSD linear in sequence length on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,  # (1, Q, 1, P)
+    a_ref,  # (1, Q, 1)
+    b_ref,  # (1, Q, 1, N)
+    c_ref,  # (1, Q, 1, N)
+    y_ref,  # (1, Q, 1, P)
+    hout_ref,  # (1, 1, N, P) final state (written at last chunk)
+    h_ref,  # scratch (N, P) fp32
+    *,
+    Q: int,
+    nc: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)  # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    b = b_ref[0, :, 0].astype(jnp.float32)  # (Q, N)
+    c = c_ref[0, :, 0].astype(jnp.float32)  # (Q, N)
+    L = jnp.cumsum(a)  # (Q,) inclusive log-decay prefix
+    # ---- intra-chunk quadratic term ----
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C_i . B_j
+    decay = L[:, None] - L[None, :]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    gate = jnp.exp(jnp.where(iq >= jq, decay, -jnp.inf))
+    y = jax.lax.dot_general(
+        scores * gate, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+    # ---- inter-chunk: carried state ----
+    y += jax.lax.dot_general(
+        c, h_ref[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(L)[:, None]
+    # ---- state update ----
+    seg = jnp.exp(L[-1] - L)  # (Q,)
+    h_new = h_ref[...] * jnp.exp(L[-1]) + jax.lax.dot_general(
+        b * seg[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (N, P)
+    h_ref[...] = h_new
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P) dt-scaled inputs
+    log_dA: jax.Array,  # (B, S, H) fp32
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P) fp32, final state (B,H,N,P) fp32)."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert H % G == 0
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    kernel = functools.partial(_kernel, Q=Q, nc=nc)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bh, ci: (bh // H, ci, bh % H, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bh, ci: (bh // H, ci, bh % H)),
+            pl.BlockSpec((1, Q, 1, N), lambda bh, ci: (bh // H, ci, (bh % H) // rep, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda bh, ci: (bh // H, ci, (bh % H) // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bh, ci: (bh // H, ci, bh % H, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bh, ci: (bh // H, bh % H, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, log_dA, Bm, Cm)
+    return y, h

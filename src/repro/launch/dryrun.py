@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at backend
+init, and the dry-run needs 512 placeholder devices for the production mesh.
+(Smoke tests and benches import other modules and correctly see 1 device.)
+
+For each cell this driver:
+  1. builds the production mesh (single-pod 16x16 or multi-pod 2x16x16),
+  2. builds the train or serve bundle (the SAME factories the trainer uses),
+  3. ``.lower(**ShapeDtypeStructs)`` then ``.compile()`` — no allocation,
+  4. records ``memory_analysis()`` (fits-HBM proof), ``cost_analysis()``
+     (FLOPs/bytes), and the post-SPMD collective schedule,
+  5. writes one JSON artifact per cell under benchmarks/artifacts/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, SHAPES, get_config, input_specs
+from repro.launch.mesh import batch_axes_of, make_production_mesh
+from repro.roofline import hw
+from repro.roofline.analysis import analyze, model_flops_for_cell, parse_collectives
+from repro.train.steps import make_serve_bundle, make_train_bundle
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts", "dryrun"
+)
+
+
+def _shard_inputs(mesh, specs: Dict[str, jax.ShapeDtypeStruct], batch_axes):
+    """Attach batch shardings to the abstract inputs where divisible."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    n_data = 1
+    for a in batch_axes:
+        n_data *= mesh.shape[a]
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    out = {}
+    for k, s in specs.items():
+        if s.shape and s.shape[0] % n_data == 0 and s.shape[0] > 1:
+            spec = P(*((bspec,) + (None,) * (len(s.shape) - 1)))
+        else:
+            spec = P(*((None,) * len(s.shape)))
+        out[k] = jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, spec))
+    return out
+
+
+def _lower_cell(cfg, shape, mesh, batch_axes, q_chunk, microbatches,
+                layout="megatron", zero2_grads=False):
+    """Build the right bundle for the cell and return the Lowered object."""
+    if shape.kind == "train":
+        bundle = make_train_bundle(
+            cfg, mesh, batch_axes, q_chunk=q_chunk, microbatches=microbatches,
+            layout=layout, zero2_grads=zero2_grads,
+        )
+        inputs = _shard_inputs(mesh, input_specs(cfg, shape), batch_axes)
+        return bundle.step_fn.lower(
+            bundle.abstract_params, bundle.abstract_opt, inputs
+        )
+    bundle = make_serve_bundle(
+        cfg, mesh, batch_axes, batch=shape.global_batch,
+        max_len=shape.seq_len, q_chunk=q_chunk,
+    )
+    inputs = _shard_inputs(mesh, input_specs(cfg, shape), batch_axes)
+    if shape.kind == "prefill":
+        args = [bundle.abstract_params, inputs["tokens"]]
+        if cfg.frontend is not None:
+            args.append(inputs["frontend_embeds"])
+        return bundle.prefill_fn.lower(*args)
+    cache = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        bundle.abstract_cache,
+        bundle.cache_shardings,
+    )
+    return bundle.decode_fn.lower(
+        bundle.abstract_params, cache, inputs["tokens"], inputs["cache_len"]
+    )
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    q_chunk: int = 512,
+    microbatches: int = 8,
+    save: bool = True,
+    opt_override: Optional[Dict[str, Any]] = None,
+    cost_pass: bool = True,
+    layout: str = "megatron",
+    zero2_grads: bool = False,
+    tag: str = "",
+) -> Dict[str, Any]:
+    """Lower+compile one cell (two passes) and record the artifacts.
+
+    Pass A ("memory", rolled scans + microbatching): this is the program a
+    real deployment runs — its ``memory_analysis`` is the fits-HBM proof.
+    Pass B ("cost", fully unrolled scans, microbatches=1): XLA's
+    ``cost_analysis`` counts a while-loop body once, ignoring trip count, so
+    FLOPs/bytes/collectives for the roofline must come from loop-free HLO.
+    """
+    from repro.models import flags
+
+    cfg = get_config(arch)
+    if opt_override:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, **opt_override)
+    shape = SHAPES[shape_name]
+    supported, reason = cfg.shape_supported(shape)
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "layout": layout,
+        "tag": tag,
+    }
+    if not supported:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        if save:
+            _save(record)
+        return record
+
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    num_chips = mesh.size
+    batch_axes = batch_axes_of(mesh)
+    mb = microbatches if shape.kind == "train" else 1
+    # The unrolled cost pass for SSM/hybrid prefill at 32k (48-72 layers x
+    # 128 SSD chunks, loop-free) takes hours of XLA-CPU compile time; those
+    # cells report the analytic roofline instead (EXPERIMENTS.md notes them).
+    ssd_prefill = (
+        cfg.ssm is not None and shape.kind == "prefill" and shape.seq_len > 16_384
+    )
+    hybrid_giant_train = (
+        cfg.ssm is not None and cfg.moe is not None and shape.kind == "train"
+    )
+    if cost_pass and (ssd_prefill or hybrid_giant_train):
+        cost_pass = False
+        record["cost_pass_skipped"] = (
+            "unrolled SSD-heavy graph impractical to compile on CPU"
+        )
+    try:
+        # ---- pass A: memory (rolled, microbatched) ----
+        t0 = time.time()
+        lowered = _lower_cell(cfg, shape, mesh, batch_axes, q_chunk, mb, layout, zero2_grads)
+        compiled = lowered.compile()
+        t_mem = time.time() - t0
+        ma = compiled.memory_analysis()
+        per_dev_bytes = int(
+            ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes
+        )
+        record["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "per_device_bytes": per_dev_bytes,
+            "hbm_bytes": hw.HBM_BYTES,
+            "fits_hbm": bool(
+                per_dev_bytes - int(ma.alias_size_in_bytes) <= hw.HBM_BYTES
+            ),
+            "microbatches": mb,
+            "compile_s": round(t_mem, 2),
+        }
+        record["status"] = "ok"
+
+        # ---- pass B: cost (unrolled, single batch pass) ----
+        if cost_pass:
+            t0 = time.time()
+            with flags.full_unroll():
+                lowered_u = _lower_cell(cfg, shape, mesh, batch_axes, q_chunk, 1, layout, zero2_grads)
+                compiled_u = lowered_u.compile()
+            t_cost = time.time() - t0
+            cost = compiled_u.cost_analysis()
+            hlo = compiled_u.as_text()
+            mf = model_flops_for_cell(cfg, shape)
+            roof = analyze(cost, hlo, mf, num_chips)
+            record["roofline"] = {
+                "flops_per_device": roof.flops,
+                "bytes_per_device": roof.bytes_accessed,
+                "collective_bytes": roof.collective_bytes,
+                "collective_counts": roof.collective_counts,
+                "compute_s": roof.compute_s,
+                "memory_s": roof.memory_s,
+                "collective_s": roof.collective_s,
+                "bottleneck": roof.bottleneck,
+                "model_flops_per_device": roof.model_flops,
+                "useful_ratio": roof.useful_ratio,
+                "compile_s": round(t_cost, 2),
+            }
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    if save:
+        _save(record)
+    return record
+
+
+def _save(record: Dict[str, Any]) -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    suffix = f"_{record['tag']}" if record.get("tag") else ""
+    name = f"{record['arch']}_{record['shape']}_{record['mesh']}{suffix}.json"
+    with open(os.path.join(ARTIFACT_DIR, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def _fmt(record: Dict[str, Any]) -> str:
+    if record["status"] == "skipped":
+        return f"SKIP  {record['arch']:24s} {record['shape']:12s} {record['mesh']:6s} ({record['reason'][:60]})"
+    if record["status"] == "error":
+        return f"FAIL  {record['arch']:24s} {record['shape']:12s} {record['mesh']:6s} {record['error'][:90]}"
+    m = record["memory"]
+    out = (
+        f"OK    {record['arch']:24s} {record['shape']:12s} {record['mesh']:6s} "
+        f"mem/dev={m['per_device_bytes']/2**30:7.2f}GiB fits={str(m['fits_hbm']):5s}"
+    )
+    if "roofline" in record:
+        r = record["roofline"]
+        out += f" bottleneck={r['bottleneck']:10s} useful={r['useful_ratio']:.2f}"
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--no-cost", action="store_true", help="skip the unrolled cost pass")
+    ap.add_argument("--resume", action="store_true", help="skip cells with existing ok artifacts")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                if args.resume:
+                    p = os.path.join(ARTIFACT_DIR, f"{arch}_{shape}_{mesh_name}.json")
+                    if os.path.exists(p):
+                        with open(p) as f:
+                            prev = json.load(f)
+                        done_cost = (
+                            args.no_cost
+                            or "roofline" in prev
+                            or prev.get("cost_pass_skipped")
+                            or prev.get("status") == "skipped"
+                        )
+                        if prev.get("status") in ("ok", "skipped") and done_cost:
+                            print(f"RESUME {arch} {shape} {mesh_name} (cached)", flush=True)
+                            continue
+                rec = run_cell(
+                    arch, shape, mesh_name, q_chunk=args.q_chunk,
+                    microbatches=args.microbatches, save=not args.no_save,
+                    cost_pass=not args.no_cost,
+                )
+                print(_fmt(rec), flush=True)
+                failures += rec["status"] == "error"
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

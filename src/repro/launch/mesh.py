@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run must set
+``XLA_FLAGS`` before anything initializes the backend.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The assigned production meshes.
+
+    single-pod: (16, 16) = 256 chips, axes ("data", "model")
+    multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model")
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_smoke_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
+    )
+
+
+def batch_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Axes that carry the batch dimension (pod composes with data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,94 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimb driver: run the optimization variants for the three
+selected cells and record tagged artifacts next to the baselines.
+
+Cells (chosen per the assignment: worst roofline fraction / most
+collective-bound / most representative):
+  A. minitron-8b  x train_4k   — representative dense DLT job; baseline is
+     collective-bound on TP activation all-reduces.
+  B. deepseek-v3-671b x train_4k — most collective-bound (FSDP weight
+     all-gathers dominate at ~1 TB/device/step).
+  C. qwen3-32b x decode_32k    — serving cell; memory-bound on KV cache +
+     weight reads, over HBM at bf16.
+
+Variants (hypotheses and outcomes are logged in EXPERIMENTS.md §Perf):
+  A1  layout=zero3        pure-DP ZeRO-3 over both mesh axes
+  A2  microbatches=16     (memory headroom for A1 at 1 seq/device)
+  B1  ep_wide             experts sharded over both axes on E (1/chip)
+  B2  ep_wide + dots      + selective remat (keep matmul outputs)
+  C1  kv_cache_dtype=int8 quantized KV cache
+  C2  C1 + q_chunk 256    (smaller score tiles)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf [--only A1 B1 ...]
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch.dryrun import _fmt, run_cell
+
+
+def variants():
+    ds = get_config("deepseek-v3-671b")
+    return {
+        # --- A: minitron train ---
+        "A1": dict(
+            arch="minitron-8b", shape_name="train_4k", mesh_name="single",
+            layout="zero3", tag="zero3",
+        ),
+        "A2": dict(
+            arch="minitron-8b", shape_name="train_4k", mesh_name="single",
+            layout="zero3", microbatches=16, tag="zero3-mb16",
+        ),
+        # --- B: deepseek-v3 train ---
+        "B1": dict(
+            arch="deepseek-v3-671b", shape_name="train_4k", mesh_name="single",
+            opt_override={"moe": dataclasses.replace(ds.moe, ep_wide=True)},
+            tag="epwide",
+        ),
+        "B2": dict(
+            arch="deepseek-v3-671b", shape_name="train_4k", mesh_name="single",
+            opt_override={
+                "moe": dataclasses.replace(ds.moe, ep_wide=True),
+                "remat": "dots",
+            },
+            tag="epwide-dots",
+        ),
+        # --- A3/B3: ZeRO-2 data-sharded fp32 grad accumulators ---
+        "A3": dict(
+            arch="qwen3-32b", shape_name="train_4k", mesh_name="single",
+            zero2_grads=True, tag="zero2grads",
+        ),
+        "B3": dict(
+            arch="internlm2-20b", shape_name="train_4k", mesh_name="single",
+            zero2_grads=True, tag="zero2grads",
+        ),
+        # --- C: qwen3 decode ---
+        "C1": dict(
+            arch="qwen3-32b", shape_name="decode_32k", mesh_name="single",
+            opt_override={"kv_cache_dtype": "int8"}, tag="int8kv",
+        ),
+        "C2": dict(
+            arch="qwen3-32b", shape_name="decode_32k", mesh_name="single",
+            opt_override={"kv_cache_dtype": "int8"}, q_chunk=256,
+            tag="int8kv-qc256",
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    for key, kw in variants().items():
+        if args.only and key not in args.only:
+            continue
+        rec = run_cell(**kw)
+        print(f"[{key}]", _fmt(rec), flush=True)
+
+
+if __name__ == "__main__":
+    main()

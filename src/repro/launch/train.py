@@ -1,0 +1,73 @@
+"""Training launcher.
+
+Runs a (reduced or full) architecture with the fault-tolerant trainer on
+whatever devices are available.  On this CPU container use ``--smoke`` for
+the reduced configs; on a real TPU slice the same entry point drives the
+production mesh (the dry-run proves each full config's distribution plan).
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --smoke \
+      --steps 60 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import SHAPES, get_config, smoke_config
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.launch.mesh import batch_axes_of, make_production_mesh, make_smoke_mesh
+from repro.train.steps import make_train_bundle
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--steps-per-epoch", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+        mesh = None
+        batch = args.batch or 4
+        seq = args.seq or 128
+    else:
+        mesh = make_production_mesh()
+        shape = SHAPES["train_4k"]
+        batch = args.batch or shape.global_batch
+        seq = args.seq or shape.seq_len
+
+    batch_axes = batch_axes_of(mesh) if mesh is not None else ("data",)
+    bundle = make_train_bundle(
+        cfg, mesh, batch_axes, microbatches=args.microbatches
+    )
+    pipe = SyntheticPipeline(
+        DataConfig(cfg.vocab_size, seq_len=seq, global_batch=batch, seed=args.seed)
+    )
+    trainer = Trainer(
+        bundle,
+        pipe,
+        TrainerConfig(
+            total_steps=args.steps,
+            steps_per_epoch=args.steps_per_epoch,
+            ckpt_every_steps=args.steps_per_epoch,
+            ckpt_dir=args.ckpt_dir,
+        ),
+    )
+    print(trainer.init_or_restore(args.seed))
+    report = trainer.train()
+    print("report:", report)
+
+
+if __name__ == "__main__":
+    main()

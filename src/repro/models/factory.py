@@ -1,0 +1,22 @@
+"""Model factory: ArchConfig -> model instance."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDecModel
+from repro.models.transformer import Model
+
+
+def build_model(
+    cfg: ArchConfig,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    batch_axes: Tuple[str, ...] = ("data",),
+    q_chunk: int = 1024,
+):
+    if cfg.enc_dec:
+        return EncDecModel(cfg, mesh, batch_axes, q_chunk)
+    return Model(cfg, mesh, batch_axes, q_chunk)

@@ -1,0 +1,40 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(
+    peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        # (step + 1): the first optimizer step must not be a zero-lr no-op
+        warm = peak_lr * (step + 1.0) / max(warmup_steps, 1)
+        progress = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (
+            final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * progress))
+        )
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_decay(peak_lr: float, warmup_steps: int, total_steps: int) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip(1.0 - (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, peak_lr * frac)
+
+    return schedule

@@ -1,0 +1,17 @@
+"""Target hardware constants (TPU v5e, per assignment).
+
+The container is CPU-only; these constants parametrize the analytical
+roofline derived from the compiled dry-run artifacts.
+"""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+HBM_BYTES = 16 * 2**30  # v5e HBM capacity per chip
+
+# power model (used by the TPU flavour of the cluster simulator)
+CHIP_IDLE_W = 60.0
+CHIP_PEAK_W = 220.0
+HOST_IDLE_W = 250.0  # per-host (CPU tray) idle
+HOST_PEAK_W = 450.0
+CHIPS_PER_HOST = 8

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# IMPORTANT: tests run on the single real CPU device (the 512-device
+# XLA_FLAGS override belongs to launch/dryrun.py ONLY).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

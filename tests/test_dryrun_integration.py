@@ -1,0 +1,46 @@
+"""Integration: one real dry-run cell compiles on the multi-pod mesh.
+
+Runs in a subprocess because the 512-placeholder-device XLA_FLAGS override
+must be set before jax initializes (the test session itself runs on 1 CPU
+device).  Uses the cheapest cell (danube long_500k decode) to keep the
+suite fast; the full 80-cell sweep is driven by ``repro.launch.dryrun``.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_cell_compiles(mesh):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "repro.launch.dryrun",
+            "--arch",
+            "h2o-danube-1.8b",
+            "--shape",
+            "long_500k",
+            "--mesh",
+            mesh,
+            "--no-save",
+            "--no-cost",
+        ],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env=env,
+        cwd=REPO,
+    )
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-2000:]
+    assert "OK" in proc.stdout, out[-2000:]
+    assert "fits=True" in proc.stdout, out[-2000:]

@@ -1,0 +1,172 @@
+"""Optimizer, data-pipeline and checkpoint substrate tests."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpoint import (
+    AsyncCheckpointer,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.optim.adamw import (
+    Adafactor,
+    AdamW,
+    OptimizerConfig,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.compression import (
+    compress_grads,
+    compressed_bytes,
+    init_error_feedback,
+)
+from repro.optim.schedules import cosine_with_warmup, linear_decay
+
+
+# ------------------------------------------------------------------ optimizers
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(opt_name):
+    """min ||Wx - y||^2 — a few steps must reduce the loss."""
+    opt = (
+        AdamW(OptimizerConfig(weight_decay=0.0))
+        if opt_name == "adamw"
+        else Adafactor(OptimizerConfig(weight_decay=0.0))
+    )
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (8, 8), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16), jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(2), (8, 16), jnp.float32)
+    params = {"w": W}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.mean(jnp.square(p["w"] @ x - y))
+
+    l0 = float(loss_fn(params))
+    for _ in range(50):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(0.05))
+    assert float(loss_fn(params)) < 0.5 * l0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 10.0), "b": jnp.full((2, 2), -10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) > 1.0
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_schedules_shape():
+    s = cosine_with_warmup(1e-3, 10, 100)
+    assert 0.0 < float(s(0)) <= 2e-4  # first step is NOT a zero-lr no-op
+    assert abs(float(s(10)) - 1e-3) < 1e-9
+    assert float(s(100)) < float(s(50))
+    l = linear_decay(1e-3, 10, 100)
+    assert float(l(100)) <= 1e-9 + 0.0
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 1000))
+def test_compression_error_feedback_bounded(seed):
+    """Error-feedback residual stays bounded; accumulated compressed grads
+    converge to the true sum (the EF property)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    ef = init_error_feedback({"g": g})
+    total_true = np.zeros(64)
+    total_comp = np.zeros(64)
+    for _ in range(30):
+        comp, ef = compress_grads({"g": g}, ef)
+        total_true += np.asarray(g)
+        total_comp += np.asarray(comp["g"])
+    # residual bounded by one quantization step's worth of mass
+    resid = np.abs(total_true - total_comp).max()
+    assert resid <= float(jnp.abs(g).max()) / 127.0 * 35
+    assert compressed_bytes(1000, bits=8) == 500
+
+
+# ------------------------------------------------------------------ pipeline
+
+
+def test_pipeline_deterministic_and_restartable():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4, seed=9)
+    p1 = SyntheticPipeline(cfg)
+    p2 = SyntheticPipeline(cfg)
+    a, la = p1.batch_at(17)
+    b, lb = p2.batch_at(17)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+    # labels are next-token shifted
+    tokens, labels = p1.global_batch_at(3)
+    np.testing.assert_array_equal(tokens[:, 1:], labels[:, :-1])
+
+
+def test_pipeline_host_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8, seed=1)
+    full, _ = SyntheticPipeline(cfg).batch_at(5)
+    parts = [SyntheticPipeline(cfg, host_index=h, host_count=4).batch_at(5)[0] for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full)
+
+
+def test_pipeline_tokens_in_range():
+    cfg = DataConfig(vocab_size=503, seq_len=64, global_batch=2, seed=2)
+    tokens, labels = SyntheticPipeline(cfg).batch_at(0)
+    assert tokens.min() >= 0 and tokens.max() < 503
+
+
+# ------------------------------------------------------------------ checkpoint
+
+
+def test_checkpoint_roundtrip_bf16():
+    tree = {
+        "w": jnp.asarray(np.random.randn(4, 4), jnp.bfloat16),
+        "s": jnp.asarray(3, jnp.int32),
+        "nested": {"v": jnp.asarray(np.random.randn(8), jnp.float32)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, tree, {"note": "x"})
+        restored, meta = restore_checkpoint(latest_checkpoint(d), tree)
+        assert meta["step"] == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32)
+            )
+
+
+def test_checkpoint_gc_keeps_latest():
+    tree = {"w": jnp.zeros((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        for step in range(6):
+            save_checkpoint(d, step, tree, keep=2)
+        kept = sorted(os.listdir(d))
+        assert len(kept) == 2
+        assert kept[-1] == "step_0000000005"
+
+
+def test_async_checkpointer():
+    tree = {"w": jnp.ones((16,))}
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d)
+        ck.save(1, tree)
+        ck.save(2, jax.tree.map(lambda x: x * 2, tree))
+        ck.wait()
+        restored, meta = restore_checkpoint(latest_checkpoint(d), tree)
+        assert meta["step"] == 2
+        np.testing.assert_array_equal(np.asarray(restored["w"]), 2.0)
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"w": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(latest_checkpoint(d), {"w": jnp.zeros((5,))})

