@@ -1,0 +1,105 @@
+"""Elastic scheduling benchmark: EaCO-Elastic vs EaCO/EaCO-Occ and the
+three paper baselines on the default 100-job trace with an elastic job mix.
+
+Emits per-scheduler total energy, average JCT/JTT, resize counts, and
+active-node occupancy; writes ``benchmarks/artifacts/elastic_bench.json``
+and the repo-root ``BENCH_elastic.json`` trajectory file that future PRs
+compare against.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import Row, save_json
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import TraceConfig, generate_trace, load_into
+from repro.core.baselines import FIFO, FIFOPacked, Gandiva
+from repro.core.eaco import EaCO, EaCOOcc
+from repro.core.eaco_elastic import EaCOElastic
+
+TRACE = TraceConfig(n_jobs=100, seed=0, elastic_frac=0.6)
+SIM = dict(n_nodes=28, seed=0)
+
+SCHEDULERS = [
+    ("fifo", FIFO),
+    ("fifo_packed", FIFOPacked),
+    ("gandiva", Gandiva),
+    ("eaco", EaCO),
+    ("eaco-occ", EaCOOcc),
+    ("eaco-elastic", EaCOElastic),
+]
+
+
+def run() -> List[Row]:
+    trace = generate_trace(TRACE)
+    results: Dict[str, Dict] = {}
+    wall: Dict[str, float] = {}
+    for name, mk in SCHEDULERS:
+        t0 = time.perf_counter()
+        sim = Simulator(SimConfig(**SIM), mk())
+        load_into(sim, trace)
+        sim.run(until=100_000)
+        wall[name] = (time.perf_counter() - t0) * 1e6
+        results[name] = sim.results()
+        if name == "eaco-elastic":
+            results[name]["resize_skipped"] = sim.resize_skipped
+            stats = sim.scheduler.controller.stats
+            results[name]["resize_plans"] = dict(stats.by_kind)
+            results[name]["predicted_saving_kwh"] = round(
+                stats.predicted_saving_kwh, 1
+            )
+
+    ref = results["eaco"]
+    payload = {}
+    for name, r in results.items():
+        payload[name] = {
+            "energy_kwh": round(r["total_energy_kwh"], 1),
+            "energy_vs_eaco": round(r["total_energy_kwh"] / ref["total_energy_kwh"], 4),
+            "avg_jct_h": round(r["avg_jct_h"], 3),
+            "jct_vs_eaco": round(r["avg_jct_h"] / ref["avg_jct_h"], 4),
+            "avg_jtt_h": round(r["avg_jtt_h"], 3),
+            "jobs_done": r["jobs_done"],
+            "deadline_violations": r["deadline_violations"],
+            "avg_active_nodes": round(r["avg_active_nodes"], 2),
+            "resize_count": r["resize_count"],
+        }
+        for extra in ("resize_skipped", "resize_plans", "predicted_saving_kwh"):
+            if extra in r:
+                payload[name][extra] = r[extra]
+    save_json("elastic_bench.json", payload)
+
+    bench = {
+        "trace": {"n_jobs": TRACE.n_jobs, "seed": TRACE.seed,
+                  "elastic_frac": TRACE.elastic_frac},
+        "cluster": SIM,
+        "results": payload,
+    }
+    root = os.path.join(os.path.dirname(__file__), "..", "BENCH_elastic.json")
+    with open(os.path.abspath(root), "w") as f:
+        json.dump(bench, f, indent=1)
+
+    e = payload["eaco-elastic"]
+    return [
+        Row(
+            "elastic/eaco_elastic_vs_eaco",
+            wall["eaco-elastic"],
+            f"energy={100 * (e['energy_vs_eaco'] - 1):+.1f}% "
+            f"jct={100 * (e['jct_vs_eaco'] - 1):+.2f}% "
+            f"resizes={e['resize_count']} "
+            f"active_nodes={e['avg_active_nodes']} "
+            f"(vs eaco {payload['eaco']['avg_active_nodes']})",
+        )
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)
+    with open(
+        os.path.join(os.path.dirname(__file__), "artifacts", "elastic_bench.json")
+    ) as f:
+        print(json.dumps(json.load(f), indent=1))

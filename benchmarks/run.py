@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig1     — paper Fig. 1 / Tables 3-4 (co-location energy & JCT)
   fig3     — paper Fig. 3 (cluster energy/runtime, 3 regimes x 5 schedulers)
   fig4     — paper Fig. 4 (active-node timelines)
+  elastic  — EaCO-Elastic vs EaCO + baselines (energy/JCT/resize counts)
   roofline — §Roofline terms per (arch x shape x mesh) from the dry-run
   kernels  — Pallas kernel micro-benches + interpret-mode correctness
 """
@@ -17,7 +18,8 @@ import sys
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (
-        fig1, fig3, fig4, kernels_bench, roofline_bench, table1, tpu_cluster,
+        elastic_bench, fig1, fig3, fig4, kernels_bench, roofline_bench,
+        table1, tpu_cluster,
     )
 
     modules = [
@@ -26,6 +28,7 @@ def main() -> None:
         ("fig3", fig3),
         ("fig4", fig4),
         ("tpu_cluster", tpu_cluster),
+        ("elastic", elastic_bench),
         ("roofline", roofline_bench),
         ("kernels", kernels_bench),
     ]

@@ -16,11 +16,15 @@ from repro.cluster.simulator import SimConfig, Simulator
 from repro.cluster.trace import TraceConfig, generate_trace, load_into
 from repro.core.baselines import FIFO, FIFOPacked, Gandiva
 from repro.core.eaco import EaCO
+from repro.core.eaco_elastic import EaCOElastic
 
 
 def main() -> None:
-    trace = generate_trace(TraceConfig(n_jobs=40, arrival_rate_per_hour=2.0, seed=3))
-    print(f"trace: {len(trace)} DLT jobs (paper's CV mix), Poisson arrivals\n")
+    trace = generate_trace(
+        TraceConfig(n_jobs=40, arrival_rate_per_hour=2.0, seed=3, elastic_frac=0.5)
+    )
+    print(f"trace: {len(trace)} DLT jobs (paper's CV mix, half elastic), "
+          f"Poisson arrivals\n")
     print(f"{'scheduler':14s} {'energy kWh':>11s} {'avg JCT h':>10s} {'avg JTT h':>10s} "
           f"{'active nodes':>13s} {'SLO misses':>10s}")
     results = {}
@@ -29,6 +33,7 @@ def main() -> None:
         ("fifo_packed", FIFOPacked()),
         ("gandiva", Gandiva()),
         ("eaco", EaCO()),
+        ("eaco-elastic", EaCOElastic()),
     ]:
         sim = Simulator(SimConfig(n_nodes=16, seed=3), sched)
         load_into(sim, trace)

@@ -24,10 +24,29 @@ class JobProfile:
     mem_util: float  # average per-GPU memory utilization, percent
     peak_mem_util: float  # peak per-GPU memory utilization, percent
     n_gpus: int = 8
+    # elastic bounds (0 = pinned at n_gpus, i.e. the job is rigid); widths
+    # between them are legal resize targets for ``Simulator.resize``
+    min_gpus: int = 0
+    max_gpus: int = 0
+    # data-parallel efficiency falloff per extra worker (Amdahl-style; see
+    # repro.elastic.scaling) — only consulted for non-reference widths
+    scaling_c: float = 0.02
 
     @property
     def base_jct_hours(self) -> float:
         return self.epoch_hours * self.epochs
+
+    @property
+    def min_width(self) -> int:
+        return self.min_gpus or self.n_gpus
+
+    @property
+    def max_width(self) -> int:
+        return self.max_gpus or self.n_gpus
+
+    @property
+    def is_elastic(self) -> bool:
+        return self.min_width < self.max_width
 
 
 def paper_profiles() -> Dict[str, JobProfile]:
@@ -86,6 +105,8 @@ class Job:
     gpu_ids: Tuple[int, ...] = ()
     undo_count: int = 0
     restart_count: int = 0
+    resize_count: int = 0
+    energy_kwh: float = 0.0  # attributed share of node energy (see Node)
 
     @property
     def remaining_epochs(self) -> float:

@@ -80,13 +80,28 @@ class Node:
     def account_energy(self, now: float, jobs: Dict[int, Job], power: PowerModel):
         dt = now - self.last_account_time
         if dt > 0:
+            residents = self.resident_job_ids()
             if self.state == NodeState.SLEEP:
                 p = power.sleep_w
             elif self.state == NodeState.FAILED:
                 p = 0.0
-            elif self.is_idle():
+            elif not residents:
                 p = power.idle_w
             else:
                 p = power.node_power(self.node_util(jobs))
-            self.energy_kwh += p * dt / 1000.0
+            kwh = p * dt / 1000.0
+            self.energy_kwh += kwh
+            if residents and self.state == NodeState.ON:
+                # per-job attribution: split the node draw by each resident's
+                # compute demand (duty cycle x held GPUs).  Shares are a
+                # function of residency alone, so a resize performed as
+                # deallocate+allocate at the same instant attributes
+                # identically to Simulator.resize().
+                weights = {
+                    j: max(jobs[j].profile.gpu_util, 1e-6) * len(jobs[j].gpu_ids)
+                    for j in residents
+                }
+                total_w = sum(weights.values())
+                for j, w in weights.items():
+                    jobs[j].energy_kwh += kwh * w / total_w
         self.last_account_time = now

@@ -23,8 +23,10 @@ import numpy as np
 
 from repro.cluster import colocation
 from repro.cluster.job import Job, JobProfile, JobState
+from repro.cluster.jobqueue import OrderedQueue
 from repro.cluster.node import Node, NodeState
 from repro.cluster.power import PowerModel, v100_power_model
+from repro.elastic import scaling
 
 
 @dataclasses.dataclass(order=True)
@@ -49,6 +51,10 @@ class SimConfig:
     straggler_factor: float = 1.5
     # bookkeeping
     active_node_sample_hours: float = 1.0
+    # hard co-location depth cap on the resize/migration path (the paper's
+    # calibration stops at 4 jobs/GPU; schedulers' admission thresholds are
+    # tighter still, and resizes must not exceed what admission would allow)
+    resize_max_jobs_per_gpu: int = 4
 
 
 class Simulator:
@@ -67,7 +73,8 @@ class Simulator:
         self._heap: List[_Event] = []
         self.nodes = [Node(i, cfg.gpus_per_node) for i in range(cfg.n_nodes)]
         self.jobs: Dict[int, Job] = {}
-        self.queue: List[int] = []  # arrival-ordered job ids awaiting allocation
+        # arrival-ordered job ids awaiting allocation (O(1) remove/front-insert)
+        self.queue = OrderedQueue()
         # per-job rate bookkeeping
         self._rate: Dict[int, float] = {}  # epochs/hour
         self._last_progress_t: Dict[int, float] = {}
@@ -80,6 +87,12 @@ class Simulator:
         self.events_processed = 0
         self._dirty = False
         self._done_count = 0
+        # elastic resizing
+        self._pending_resize: Set[int] = set()  # job ids with a resize queued
+        # per-job invalidation counter: bumped by deallocate so a pending
+        # resize scored against the old placement can never fire
+        self._resize_ver: Dict[int, int] = {}
+        self.resize_skipped: int = 0  # requests that were stale at fire time
 
     # ------------------------------------------------------------------ util
 
@@ -120,7 +133,10 @@ class Simulator:
             self._advance_progress(job)
             others = [j for j in self._coresidents(job)]
             infl = self.true_inflation([j.profile for j in others])
-            epoch_h = job.profile.epoch_hours * infl * node.slowdown
+            # width-aware exclusive epoch time: identical to
+            # profile.epoch_hours at the reference width
+            excl_h = scaling.epoch_hours_at(job.profile, len(job.gpu_ids))
+            epoch_h = excl_h * infl * node.slowdown
             self._rate[jid] = 1.0 / epoch_h
             self._schedule_epoch_event(job)
 
@@ -132,13 +148,28 @@ class Simulator:
             )
         self._last_progress_t[job.id] = self.now
 
+    @staticmethod
+    def _next_epoch_boundary(done: float, total_epochs: int) -> float:
+        """Epoch count of the next whole-epoch boundary after ``done`` (the
+        single home of the boundary-rounding convention)."""
+        return min(float(math.floor(done + 1e-9) + 1), float(total_epochs))
+
+    def _projected_epochs(self, job: Job) -> float:
+        """``epochs_done`` projected forward to ``now`` under the current
+        rate (without mutating the lazy progress bookkeeping)."""
+        rate = self._rate.get(job.id, 0.0)
+        t0 = self._last_progress_t.get(job.id, self.now)
+        return min(
+            float(job.profile.epochs),
+            job.epochs_done + rate * max(self.now - t0, 0.0),
+        )
+
     def _schedule_epoch_event(self, job: Job) -> None:
         self._epoch_event_ver[job.id] = self._epoch_event_ver.get(job.id, 0) + 1
         rate = self._rate.get(job.id)
         if not rate:
             return
-        nxt = math.floor(job.epochs_done + 1e-9) + 1
-        target = min(float(nxt), float(job.profile.epochs))
+        target = self._next_epoch_boundary(job.epochs_done, job.profile.epochs)
         dt = max(target - job.epochs_done, 0.0) / rate
         self.push(
             self.now + dt,
@@ -172,10 +203,17 @@ class Simulator:
         self._account_node(node)
         self._advance_progress(job)
         node.remove_job(job)
-        job.checkpointed_epochs = int(math.floor(job.epochs_done + 1e-9))
+        if checkpoint:
+            job.checkpointed_epochs = int(math.floor(job.epochs_done + 1e-9))
+        # without a checkpoint, progress reverts to the last one taken
         job.epochs_done = float(job.checkpointed_epochs)
         self._rate.pop(job.id, None)
         self._epoch_event_ver[job.id] = self._epoch_event_ver.get(job.id, 0) + 1
+        # any pending resize was scored against this placement: invalidate
+        # it and free the slot so a fresh request can be issued immediately
+        if job.id in self._pending_resize:
+            self._pending_resize.discard(job.id)
+            self._resize_ver[job.id] = self._resize_ver.get(job.id, 0) + 1
         job.node_id = None
         job.gpu_ids = ()
         if to_queue:
@@ -185,6 +223,176 @@ class Simulator:
         self._rerate(node)
         self._dirty = True
         self.scheduler.on_node_freed(self, node)
+
+    # ------------------------------------------------------------- resizing
+
+    def pick_gpus(
+        self, node: Node, k: int, job: Job, prefer_current: bool = True
+    ) -> Optional[Tuple[int, ...]]:
+        """Choose ``k`` GPUs on ``node`` for ``job``, or None if infeasible.
+
+        Feasibility = no memory oversubscription: adding the job must keep
+        every chosen GPU's combined peak memory (excluding the job's own
+        current residency) within 100%.  Preference order: GPUs the job
+        already holds (cheap resize), then the least-loaded.
+        """
+        scored = []
+        for g in range(node.n_gpus):
+            others = [
+                self.jobs[i].profile
+                for i in node.gpu_residents[g]
+                if i != job.id
+            ]
+            # raw (uncapped) sum: the combined model saturates at 100, which
+            # would mask genuine oversubscription
+            peak = sum(p.peak_mem_util for p in others) + job.profile.peak_mem_util
+            if peak > 100.0:
+                continue
+            if len(others) + 1 > self.cfg.resize_max_jobs_per_gpu:
+                continue  # deeper sharing than the calibrated model covers
+            held = prefer_current and node.id == job.node_id and g in job.gpu_ids
+            load = sum(p.peak_mem_util for p in others)
+            scored.append((0 if held else 1, load, g))
+        if len(scored) < k:
+            return None
+        scored.sort()
+        return tuple(sorted(g for _, _, g in scored[:k]))
+
+    def resize(self, job: Job, gpu_ids: Sequence[int], node_id: Optional[int] = None) -> None:
+        """Resize (and optionally migrate) a running job, immediately.
+
+        Semantically identical to ``deallocate(to_queue=False)`` followed by
+        ``allocate`` at the same event time: progress snaps to the last
+        whole-epoch checkpoint (zero loss when called at an epoch boundary),
+        energy is settled on both nodes at ``now``, and every affected
+        resident is re-rated.  Raises ``ValueError`` on any oversubscription
+        or width-bound violation, leaving the simulation untouched.
+        """
+        if job.node_id is None or job.state not in (JobState.RUNNING, JobState.OBSERVING):
+            raise ValueError(f"job {job.id} is not allocated")
+        target = self.nodes[job.node_id if node_id is None else node_id]
+        if target.state == NodeState.FAILED:
+            raise ValueError(f"node {target.id} is failed")
+        gpu_ids = tuple(sorted(gpu_ids))
+        k = len(gpu_ids)
+        if len(set(gpu_ids)) != k:
+            raise ValueError(f"duplicate gpu ids {gpu_ids}")
+        if not all(0 <= g < target.n_gpus for g in gpu_ids):
+            raise ValueError(f"gpu ids {gpu_ids} out of range for node {target.id}")
+        prof = job.profile
+        if not prof.min_width <= k <= prof.max_width:
+            raise ValueError(
+                f"width {k} outside [{prof.min_width}, {prof.max_width}] "
+                f"for job {job.id} ({prof.name})"
+            )
+        for g in gpu_ids:
+            others = [
+                self.jobs[i].profile
+                for i in target.gpu_residents[g]
+                if i != job.id
+            ]
+            if sum(p.peak_mem_util for p in others) + prof.peak_mem_util > 100.0:
+                raise ValueError(
+                    f"GPU {target.id}:{g} memory oversubscribed by job {job.id}"
+                )
+            if len(others) + 1 > self.cfg.resize_max_jobs_per_gpu:
+                raise ValueError(
+                    f"GPU {target.id}:{g} co-location degree would exceed "
+                    f"{self.cfg.resize_max_jobs_per_gpu} jobs/GPU"
+                )
+        state = job.state
+        self.deallocate(job, to_queue=False, checkpoint=True)
+        self.allocate(job, target.id, gpu_ids)
+        job.state = state  # preserve OBSERVING through the move
+        job.resize_count += 1
+
+    def request_resize(
+        self,
+        job: Job,
+        n_gpus: int,
+        node_id: Optional[int] = None,
+        expect_residents: Optional[Sequence[int]] = None,
+    ) -> bool:
+        """Schedule a resize at the job's next epoch boundary (the paper's
+        checkpoint semantics: whole-epoch progress is never discarded).
+
+        Target GPUs are chosen at fire time from then-current residency; the
+        request is dropped (``resize_skipped``) if rates changed such that
+        the fire time is no longer a boundary, or the target became
+        infeasible.  ``expect_residents``: the co-resident job ids the
+        caller's deadline/energy analysis assumed — the resize also aborts
+        if any *other* job joined the chosen GPUs in the meantime (jobs
+        leaving is always safe).  Returns False if the job cannot accept a
+        resize now.
+        """
+        if job.id in self._pending_resize:
+            return False
+        if job.state != JobState.RUNNING:
+            return False  # OBSERVING jobs must not move mid-window
+        rate = self._rate.get(job.id)
+        if not rate:
+            return False
+        prof = job.profile
+        if not prof.min_width <= n_gpus <= prof.max_width:
+            return False
+        done_now = self._projected_epochs(job)
+        target = self._next_epoch_boundary(done_now, prof.epochs)
+        dt = max(target - done_now, 0.0) / rate
+        self._pending_resize.add(job.id)
+        self.push(
+            self.now + dt,
+            "resize",
+            {
+                "job": job.id,
+                "n_gpus": n_gpus,
+                "node": node_id,
+                "rver": self._resize_ver.get(job.id, 0),
+                "expect": None if expect_residents is None else tuple(expect_residents),
+            },
+        )
+        return True
+
+    def _ev_resize(self, payload):
+        job = self.jobs[payload["job"]]
+        if payload.get("rver") != self._resize_ver.get(job.id, 0):
+            # the placement this request was scored against was torn down
+            # (undo / failure); a fresh request may already be pending —
+            # leave its bookkeeping alone
+            self.resize_skipped += 1
+            return
+        self._pending_resize.discard(job.id)
+        if job.state != JobState.RUNNING:
+            return  # completed / undone / observing since the request
+        node = self.nodes[job.node_id]
+        self._account_node(node)
+        self._advance_progress(job)
+        frac = job.epochs_done - math.floor(job.epochs_done + 1e-9)
+        if frac > 1e-6:
+            self.resize_skipped += 1  # rates moved: not a boundary anymore
+            return
+        target_id = payload["node"] if payload["node"] is not None else job.node_id
+        target = self.nodes[target_id]
+        if target.state == NodeState.FAILED:
+            self.resize_skipped += 1
+            return
+        gpu_ids = self.pick_gpus(target, payload["n_gpus"], job)
+        if gpu_ids is None:
+            self.resize_skipped += 1
+            return
+        expect = payload.get("expect")
+        if expect is not None:
+            actual = {
+                i
+                for i in target.residents_on(gpu_ids)
+                if i != job.id and self.jobs[i].state != JobState.DONE
+            }
+            if not actual <= set(expect):
+                # a job joined the target GPUs after the plan was scored:
+                # its deadline was never checked against this co-location
+                self.resize_skipped += 1
+                return
+        self.resize(job, gpu_ids, node_id=target_id)
+        self._dirty = True
 
     def _account_node(self, node: Node) -> None:
         node.account_energy(self.now, self.jobs, self.power)
@@ -302,7 +510,9 @@ class Simulator:
             self._schedule_failure(node)
 
     def _ev_retry(self, _):
-        pass  # try_schedule runs after every event of this kind
+        # a scheduler-requested wake-up (e.g. a narrow-admission patience
+        # window expiring): mark dirty so try_schedule actually runs
+        self._dirty = True
 
     # ---------------------------------------------------------------- results
 
@@ -324,4 +534,6 @@ class Simulator:
             "deadline_violations": self.deadline_violations,
             "undo_count": sum(j.undo_count for j in self.jobs.values()),
             "restart_count": sum(j.restart_count for j in self.jobs.values()),
+            "resize_count": sum(j.resize_count for j in self.jobs.values()),
+            "job_energy_kwh": sum(j.energy_kwh for j in self.jobs.values()),
         }

@@ -9,6 +9,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.cluster.job import Job, JobProfile, lm_profiles, paper_profiles
+from repro.elastic import scaling
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,6 +26,12 @@ class TraceConfig:
     )
     mix: str = "paper"  # "paper" (4 CV jobs) | "lm" | "mixed"
     diurnal: bool = False  # modulate arrivals day/night
+    # fraction of jobs emitted as elastic (resizable between elastic_min
+    # and elastic_max GPUs, re-referenced to a sampled start width)
+    elastic_frac: float = 0.0
+    elastic_min: int = 2
+    elastic_max: int = 8
+    elastic_widths: Tuple[int, ...] = (4, 8)  # sampled reference widths
 
 
 def profile_pool(mix: str) -> List[JobProfile]:
@@ -33,6 +40,34 @@ def profile_pool(mix: str) -> List[JobProfile]:
     if mix == "lm":
         return list(lm_profiles().values())
     return list(paper_profiles().values()) + list(lm_profiles().values())
+
+
+# day/night arrival-intensity multipliers (day = first 12 h of each cycle)
+DIURNAL_DAY = 1.5
+DIURNAL_NIGHT = 0.5
+
+
+def _diurnal_rate(base: float, t: float) -> float:
+    return base * (DIURNAL_DAY if (t % 24.0) < 12.0 else DIURNAL_NIGHT)
+
+
+def _next_arrival(rng: np.random.Generator, cfg: TraceConfig, t: float) -> float:
+    """Next arrival time after ``t``.
+
+    Diurnal arrivals are a *non-homogeneous* Poisson process: sampled by
+    Lewis thinning against the peak rate, so the intensity is evaluated at
+    the candidate arrival's own time (the old code sampled the rate at the
+    PREVIOUS arrival, which let a night-time gap be drawn from the day-time
+    rate across the boundary and vice versa).
+    """
+    if not cfg.diurnal:
+        return t + float(rng.exponential(1.0 / cfg.arrival_rate_per_hour))
+    # thinning bound = the intensity function's peak, by construction
+    lam_max = cfg.arrival_rate_per_hour * max(DIURNAL_DAY, DIURNAL_NIGHT)
+    while True:
+        t += float(rng.exponential(1.0 / lam_max))
+        if float(rng.random()) * lam_max <= _diurnal_rate(cfg.arrival_rate_per_hour, t):
+            return t
 
 
 def generate_trace(cfg: TraceConfig) -> List[Tuple[JobProfile, float, float]]:
@@ -44,11 +79,13 @@ def generate_trace(cfg: TraceConfig) -> List[Tuple[JobProfile, float, float]]:
     probs = np.array([p for p, _ in cfg.deadline_tiers])
     slacks = [s for _, s in cfg.deadline_tiers]
     for _ in range(cfg.n_jobs):
-        rate = cfg.arrival_rate_per_hour
-        if cfg.diurnal:
-            rate *= 1.5 if (t % 24.0) < 12.0 else 0.5
-        t += float(rng.exponential(1.0 / rate))
+        t = _next_arrival(rng, cfg, t)
         prof = pool[int(rng.integers(len(pool)))]
+        if cfg.elastic_frac > 0 and float(rng.random()) < cfg.elastic_frac:
+            width = int(cfg.elastic_widths[int(rng.integers(len(cfg.elastic_widths)))])
+            prof = scaling.reprofile(
+                prof, width, min_gpus=cfg.elastic_min, max_gpus=cfg.elastic_max
+            )
         slack = slacks[int(rng.choice(len(slacks), p=probs / probs.sum()))]
         deadline = t + slack * prof.base_jct_hours if math.isfinite(slack) else math.inf
         out.append((prof, t, deadline))

@@ -45,10 +45,11 @@ class Thresholds:
 
 
 def find_candidates(
-    sim, job: Job, thresholds: Thresholds, allow_sleeping: bool = True
+    sim, job: Job, thresholds: Thresholds, allow_sleeping: bool = True,
+    width: Optional[int] = None,
 ) -> List[Candidate]:
     out: List[Candidate] = []
-    k = job.profile.n_gpus
+    k = width or job.profile.n_gpus
     for node in sim.nodes:
         if node.state == NodeState.FAILED:
             continue

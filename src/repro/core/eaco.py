@@ -28,6 +28,7 @@ from repro.cluster.node import Node, NodeState
 from repro.core.candidates import Candidate, Thresholds, find_candidates
 from repro.core.history import History
 from repro.core.predictor import JCTPredictor
+from repro.elastic import scaling
 
 
 @dataclasses.dataclass
@@ -63,23 +64,28 @@ class EaCO:
         """Highest utilization first (Alg. 1 line 5)."""
         return sorted(candidates, key=lambda c: -c.utilization)
 
-    def _admit(self, sim, job: Job, cand: Candidate) -> bool:
+    def _admit(self, sim, job: Job, cand: Candidate, width: Optional[int] = None) -> bool:
         residents = [sim.jobs[i] for i in cand.resident_ids]
         node = sim.nodes[cand.node_id]
+        # width map: residents run at their allocated widths (== reference
+        # for every rigid job); the newcomer at the requested width
+        widths = {j.id: len(j.gpu_ids) for j in residents if j.gpu_ids}
+        if width:
+            widths[job.id] = width
         return self.predictor.deadlines_met(
-            sim.now, [job, *residents], node.slowdown
+            sim.now, [job, *residents], node.slowdown, widths=widths or None
         )
 
-    def schedule_job(self, sim, job: Job) -> bool:
+    def schedule_job(self, sim, job: Job, width: Optional[int] = None) -> bool:
         """One pass of Alg. 1's nested loops for job j. True if allocated."""
         failed = self._failed.setdefault(job.id, set())
         cands = [
             c
-            for c in find_candidates(sim, job, self.thresholds)
+            for c in find_candidates(sim, job, self.thresholds, width=width)
             if (c.node_id, c.gpu_ids) not in failed
         ]
         for cand in self._rank(cands):
-            if not self._admit(sim, job, cand):
+            if not self._admit(sim, job, cand, width):
                 continue
             node = sim.nodes[cand.node_id]
             sim.allocate(job, cand.node_id, cand.gpu_ids)
@@ -144,7 +150,12 @@ class EaCO:
             exclusive_finish = sim.now + o.remaining_epochs * o.profile.epoch_hours
             if exclusive_finish > o.deadline:
                 continue  # hopeless SLO either way: undoing cannot help
-            epoch_h = o.profile.epoch_hours * measured_inflation * node.slowdown
+            # width-aware: a narrowed elastic job runs off its allocated
+            # width, not the reference (identical for rigid jobs)
+            excl_h = scaling.epoch_hours_at(
+                o.profile, len(o.gpu_ids) or o.profile.n_gpus
+            )
+            epoch_h = excl_h * measured_inflation * node.slowdown
             if sim.now + o.remaining_epochs * epoch_h > o.deadline:
                 ok = False
                 break

@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.cluster import colocation
 from repro.cluster.job import Job, JobProfile
 from repro.core.history import History
+from repro.elastic import scaling
 
 
 class JCTPredictor:
@@ -31,16 +32,20 @@ class JCTPredictor:
 
     def predict_finish(
         self, now: float, job: Job, co_profiles: Sequence[JobProfile],
-        node_slowdown: float = 1.0,
+        node_slowdown: float = 1.0, width: Optional[int] = None,
     ) -> float:
         """Absolute predicted completion time of ``job`` when co-located
-        with ``co_profiles`` (which must include job's own profile)."""
+        with ``co_profiles`` (which must include job's own profile).
+        ``width`` overrides the allocation width (default: the profile's
+        reference width, which is exact for every rigid job)."""
         infl = self.predict_inflation(co_profiles)
-        epoch_h = job.profile.epoch_hours * infl * node_slowdown
+        excl_h = scaling.epoch_hours_at(job.profile, width or job.profile.n_gpus)
+        epoch_h = excl_h * infl * node_slowdown
         return now + job.remaining_epochs * epoch_h
 
     def deadlines_met(
-        self, now: float, jobs: Sequence[Job], node_slowdown: float = 1.0
+        self, now: float, jobs: Sequence[Job], node_slowdown: float = 1.0,
+        widths: Optional[Dict[int, int]] = None,
     ) -> bool:
         """Eq. (2): every co-located job must meet its deadline.
 
@@ -53,6 +58,7 @@ class JCTPredictor:
             exclusive_finish = now + j.remaining_epochs * j.profile.epoch_hours
             if exclusive_finish > j.deadline:
                 continue  # hopeless SLO: best-effort, don't block placement
-            if self.predict_finish(now, j, profiles, node_slowdown) > j.deadline:
+            w = widths.get(j.id) if widths else None
+            if self.predict_finish(now, j, profiles, node_slowdown, w) > j.deadline:
                 return False
         return True

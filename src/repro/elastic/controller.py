@@ -1,0 +1,54 @@
+"""Applies Brain plans to the simulator through the resize event queue.
+
+The controller is the only component that mutates state: it takes the
+Brain's ranked plans and issues ``Simulator.request_resize`` calls, which
+land each resize on the job's next epoch boundary (checkpoint-safe).  It
+also keeps per-plan accounting so benchmarks can report what the elastic
+layer actually did versus what it predicted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.elastic.brain import Brain, Plan
+
+
+@dataclasses.dataclass
+class ControllerStats:
+    issued: int = 0
+    rejected: int = 0  # request_resize refused (pending/terminal/rate-less)
+    by_kind: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"grow": 0, "shrink": 0, "migrate": 0}
+    )
+    predicted_saving_kwh: float = 0.0
+
+
+class ElasticController:
+    def __init__(self, brain: Brain, max_actions_per_step: int = 2):
+        self.brain = brain
+        self.max_actions_per_step = max_actions_per_step
+        self.stats = ControllerStats()
+
+    def step(self, sim) -> List[Plan]:
+        """One proposal/apply round; returns the plans actually issued."""
+        applied: List[Plan] = []
+        for plan in self.brain.propose(sim):
+            if len(applied) >= self.max_actions_per_step:
+                break
+            job = sim.jobs[plan.job_id]
+            node_id = plan.node_id if plan.node_id != job.node_id else None
+            if sim.request_resize(
+                job,
+                plan.width,
+                node_id=node_id,
+                expect_residents=plan.co_resident_ids,
+            ):
+                applied.append(plan)
+                self.stats.issued += 1
+                self.stats.by_kind[plan.kind] += 1
+                self.stats.predicted_saving_kwh -= plan.energy_delta_kwh
+            else:
+                self.stats.rejected += 1
+        return applied

@@ -12,6 +12,15 @@ from typing import Tuple
 import jax
 
 
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    # jax >= 0.5 wants explicit axis_types; 0.4.x has no AxisType at all
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """The assigned production meshes.
 
@@ -20,17 +29,12 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_smoke_mesh() -> jax.sharding.Mesh:
     """1-device mesh with the production axis names (CPU tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
-    )
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 def batch_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

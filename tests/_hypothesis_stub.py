@@ -1,0 +1,96 @@
+"""Deterministic fallback for the ``hypothesis`` API surface this suite uses.
+
+The real package is declared in ``pyproject.toml`` and is preferred whenever
+importable (CI installs it); this stub only exists so the tier-1 suite still
+collects and runs in environments where ``pip install`` is unavailable.  It
+implements exactly the subset the tests use — ``@given`` with keyword
+strategies, ``@settings(max_examples, deadline, derandomize)``, and
+``st.integers / st.floats / st.lists`` — drawing examples from a seeded
+``numpy`` generator so runs are reproducible (the tests already pass
+``derandomize=True``).
+"""
+
+from __future__ import annotations
+
+import types
+from typing import Any, Callable, Dict
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_: Any) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng: np.random.Generator):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def sampled_from(options) -> _Strategy:
+    seq = list(options)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_: Any):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies: _Strategy):
+    def deco(fn):
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.Generator(np.random.PCG64(0xEAC0 + 9973 * i))
+                drawn: Dict[str, Any] = {
+                    k: s.draw(rng) for k, s in strategies.items()
+                }
+                fn(*args, **drawn, **kwargs)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco
+
+
+def install() -> types.ModuleType:
+    """Register this stub as ``hypothesis`` / ``hypothesis.strategies``."""
+    import sys
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from", "booleans"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+    return mod

@@ -5,6 +5,14 @@ import sys
 # XLA_FLAGS override belongs to launch/dryrun.py ONLY).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # prefer the real property-testing engine when installed (CI does)
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
+
 import numpy as np
 import pytest
 

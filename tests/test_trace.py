@@ -1,0 +1,95 @@
+"""Trace generator properties: determinism, deadline tiers, diurnal
+modulation, elastic mixes."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster.trace import TraceConfig, generate_trace
+
+
+def test_same_seed_same_trace():
+    a = generate_trace(TraceConfig(n_jobs=200, seed=42))
+    b = generate_trace(TraceConfig(n_jobs=200, seed=42))
+    assert len(a) == len(b) == 200
+    for (pa, ta, da), (pb, tb, db) in zip(a, b):
+        assert pa == pb and ta == tb and da == db
+
+
+def test_different_seeds_differ():
+    a = generate_trace(TraceConfig(n_jobs=50, seed=1))
+    b = generate_trace(TraceConfig(n_jobs=50, seed=2))
+    assert any(ta != tb for (_, ta, _), (_, tb, _) in zip(a, b))
+
+
+def test_deadline_tier_proportions():
+    cfg = TraceConfig(n_jobs=4000, seed=0)
+    trace = generate_trace(cfg)
+    n = len(trace)
+    no_slo = sum(1 for _, _, d in trace if not math.isfinite(d)) / n
+    # classify finite-deadline jobs by their slack factor
+    tight = relaxed = 0
+    for prof, t, d in trace:
+        if not math.isfinite(d):
+            continue
+        slack = (d - t) / prof.base_jct_hours
+        if abs(slack - 1.15) < 1e-6:
+            tight += 1
+        elif abs(slack - 2.0) < 1e-6:
+            relaxed += 1
+        else:
+            pytest.fail(f"unexpected slack factor {slack}")
+    assert abs(no_slo - 0.3) < 0.03
+    assert abs(tight / n - 0.2) < 0.03
+    assert abs(relaxed / n - 0.5) < 0.03
+
+
+def test_arrivals_monotone_and_poisson_mean():
+    cfg = TraceConfig(n_jobs=3000, seed=7, arrival_rate_per_hour=2.0)
+    trace = generate_trace(cfg)
+    times = [t for _, t, _ in trace]
+    assert all(b > a for a, b in zip(times, times[1:]))
+    mean_gap = times[-1] / len(times)
+    assert abs(mean_gap - 0.5) < 0.05  # 1/rate
+
+
+def test_diurnal_modulates_arrival_rate():
+    """Day-window (t%24 < 12) intensity must be ~3x the night intensity —
+    the rate is evaluated at each arrival's own time (thinning), not at the
+    previous arrival."""
+    cfg = TraceConfig(n_jobs=6000, seed=3, arrival_rate_per_hour=2.0, diurnal=True)
+    trace = generate_trace(cfg)
+    times = np.array([t for _, t, _ in trace])
+    horizon = times[-1]
+    n_day = int(np.sum((times % 24.0) < 12.0))
+    n_night = len(times) - n_day
+    # equal day/night wall-clock over whole days: rate ratio ~ count ratio
+    full_days = math.floor(horizon / 24.0)
+    day_hours = full_days * 12.0 + min(horizon % 24.0, 12.0)
+    night_hours = horizon - day_hours
+    ratio = (n_day / day_hours) / (n_night / night_hours)
+    assert 2.5 < ratio < 3.6, ratio  # true ratio is 1.5/0.5 = 3
+    # overall mean rate stays the configured average
+    assert abs(len(times) / horizon - 2.0) < 0.2
+
+
+def test_elastic_mix_emits_resizable_profiles():
+    cfg = TraceConfig(n_jobs=1000, seed=5, elastic_frac=0.5)
+    trace = generate_trace(cfg)
+    elastic = [p for p, _, _ in trace if p.is_elastic]
+    rigid = [p for p, _, _ in trace if not p.is_elastic]
+    assert abs(len(elastic) / len(trace) - 0.5) < 0.05
+    for p in elastic:
+        assert p.min_width == 2 and p.max_width == 8
+        assert p.n_gpus in (4, 8)
+    for p in rigid:
+        assert p.min_width == p.max_width == p.n_gpus == 8
+
+
+def test_elastic_frac_zero_identical_to_legacy():
+    """elastic_frac=0 must not perturb the RNG stream: traces are
+    bit-identical to the pre-elastic generator."""
+    a = generate_trace(TraceConfig(n_jobs=100, seed=11))
+    b = generate_trace(TraceConfig(n_jobs=100, seed=11, elastic_frac=0.0))
+    assert a == b
