@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig3     — paper Fig. 3 (cluster energy/runtime, 3 regimes x 5 schedulers)
   fig4     — paper Fig. 4 (active-node timelines)
   elastic  — EaCO-Elastic vs EaCO + baselines (energy/JCT/resize counts)
+  scale    — 10k-job Philly-style replay on a heterogeneous V100/A100 fleet
   roofline — §Roofline terms per (arch x shape x mesh) from the dry-run
   kernels  — Pallas kernel micro-benches + interpret-mode correctness
 """
@@ -19,7 +20,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (
         elastic_bench, fig1, fig3, fig4, kernels_bench, roofline_bench,
-        table1, tpu_cluster,
+        scale_bench, table1, tpu_cluster,
     )
 
     modules = [
@@ -29,6 +30,7 @@ def main() -> None:
         ("fig4", fig4),
         ("tpu_cluster", tpu_cluster),
         ("elastic", elastic_bench),
+        ("scale", scale_bench),
         ("roofline", roofline_bench),
         ("kernels", kernels_bench),
     ]

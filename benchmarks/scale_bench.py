@@ -1,0 +1,117 @@
+"""Production-scale trace replay benchmark (ROADMAP scale north star).
+
+Replays a 10k-job Philly/Helios-style trace (heavy-tailed log-normal
+durations, bursty tenant sessions, failure-retry resubmissions) on a
+heterogeneous 96-node V100/A100 fleet under EaCO, plus a same-trace
+FIFO-packed comparison point.  Records wall-clock, event throughput, and
+headline scheduler metrics to ``benchmarks/artifacts/scale_bench.json``
+and the repo-root ``BENCH_scale.json`` trajectory file.
+
+Acceptance target: the 10k-job EaCO replay completes in < 60 s.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import Row, save_json
+from repro.cluster.power import fleet_skus
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import (
+    ProductionTraceConfig,
+    generate_production_trace,
+    load_into,
+)
+from repro.core.baselines import FIFOPacked
+from repro.core.eaco import EaCO
+
+N_JOBS = 10_000
+N_NODES = 96
+SKU_MIX = (("v100", 0.5), ("a100", 0.5))
+QUEUE_WINDOW = 64  # EaCO backlog-scan bound at production scale
+
+TRACE = ProductionTraceConfig(
+    n_jobs=N_JOBS,
+    seed=0,
+    arrival_rate_per_hour=40.0,
+    duration_mu_ln_h=-0.5,  # median ~36 min at reference width
+    duration_sigma_ln_h=1.4,  # minutes -> days tail
+)
+
+
+def _run_one(scheduler, trace) -> Dict:
+    sim = Simulator(
+        SimConfig(
+            n_nodes=N_NODES,
+            seed=0,
+            node_skus=fleet_skus(N_NODES, SKU_MIX),
+        ),
+        scheduler,
+    )
+    load_into(sim, trace)
+    t0 = time.perf_counter()
+    sim.run(until=1_000_000)
+    wall_s = time.perf_counter() - t0
+    r = sim.results()
+    return {
+        "wall_s": round(wall_s, 2),
+        "events": sim.events_processed,
+        "events_per_s": int(sim.events_processed / wall_s),
+        "jobs_done": r["jobs_done"],
+        "jobs_total": r["jobs_total"],
+        "total_energy_kwh": round(r["total_energy_kwh"], 1),
+        "avg_jct_h": round(r["avg_jct_h"], 3),
+        "avg_jtt_h": round(r["avg_jtt_h"], 3),
+        "makespan_h": round(r["makespan_h"], 1),
+        "avg_active_nodes": round(r["avg_active_nodes"], 2),
+        "deadline_violations": r["deadline_violations"],
+        "undo_count": r["undo_count"],
+    }
+
+
+def run() -> List[Row]:
+    t0 = time.perf_counter()
+    trace = generate_production_trace(TRACE)
+    gen_s = time.perf_counter() - t0
+
+    results = {
+        "eaco": _run_one(EaCO(queue_window=QUEUE_WINDOW), trace),
+        "fifo_packed": _run_one(FIFOPacked(), trace),
+    }
+    payload = {
+        "trace": {
+            "n_jobs": N_JOBS,
+            "seed": TRACE.seed,
+            "generator": "philly_style_production",
+            "gen_s": round(gen_s, 2),
+        },
+        "fleet": {"n_nodes": N_NODES, "sku_mix": [list(m) for m in SKU_MIX]},
+        "queue_window": QUEUE_WINDOW,
+        "target_wall_s": 60.0,
+        "results": results,
+    }
+    save_json("scale_bench.json", payload)
+    root = os.path.join(os.path.dirname(__file__), "..", "BENCH_scale.json")
+    with open(os.path.abspath(root), "w") as f:
+        json.dump(payload, f, indent=1)
+
+    e = results["eaco"]
+    f = results["fifo_packed"]
+    return [
+        Row(
+            "scale/eaco_10k_hetero",
+            e["wall_s"] * 1e6,
+            f"wall={e['wall_s']}s events/s={e['events_per_s']} "
+            f"done={e['jobs_done']}/{e['jobs_total']} "
+            f"energy={e['total_energy_kwh']}kWh "
+            f"(fifo_packed {f['total_energy_kwh']}kWh in {f['wall_s']}s)",
+        )
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -31,6 +31,21 @@ class JobProfile:
     # data-parallel efficiency falloff per extra worker (Amdahl-style; see
     # repro.elastic.scaling) — only consulted for non-reference widths
     scaling_c: float = 0.02
+    # per-SKU throughput multipliers vs the V100 reference node, e.g.
+    # (("a100", 1.7),): memory-bound families gain less from a faster SKU
+    # than the fleet-default ``GPUSku.speed`` claims.  Empty = use the
+    # SKU's own default.
+    sku_speed: Tuple[Tuple[str, float], ...] = ()
+
+    def speed_on(self, sku_name: Optional[str], default: float = 1.0) -> float:
+        """Throughput multiplier of this family on ``sku_name`` (``default``
+        = the SKU's fleet-wide speed when the family has no override)."""
+        if sku_name is None:
+            return 1.0
+        for name, s in self.sku_speed:
+            if name == sku_name:
+                return s
+        return default
 
     @property
     def base_jct_hours(self) -> float:

@@ -1,13 +1,20 @@
-"""Cluster node model: 8 accelerators, power states, GPU-granular residency."""
+"""Cluster node model: 8 accelerators, power states, GPU-granular residency.
+
+Heterogeneous fleets: a node may carry a ``GPUSku`` (per-SKU power model and
+throughput multiplier vs the V100 reference); ``sku=None`` keeps the exact
+homogeneous reference behaviour.  Per-GPU utilization/memory composites are
+maintained incrementally on residency changes so the hot paths (energy
+accounting, candidate search) are O(1) per GPU instead of rescanning
+residents.
+"""
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from repro.cluster import colocation
 from repro.cluster.job import Job, JobProfile
-from repro.cluster.power import PowerModel
+from repro.cluster.power import GPUSku, PowerModel
 
 
 class NodeState:
@@ -20,6 +27,7 @@ class NodeState:
 class Node:
     id: int
     n_gpus: int = 8
+    sku: Optional[GPUSku] = None  # None = fleet-default (V100 reference)
     state: str = NodeState.ON
     # per-GPU resident job ids
     gpu_residents: List[Set[int]] = dataclasses.field(default_factory=list)
@@ -28,18 +36,50 @@ class Node:
     last_account_time: float = 0.0
     # degraded (straggler) multiplier on epoch times
     slowdown: float = 1.0
+    # incrementally-maintained raw (uncapped) per-GPU composites
+    util_raw: List[float] = dataclasses.field(default_factory=list, repr=False)
+    mem_raw: List[float] = dataclasses.field(default_factory=list, repr=False)
+    peak_raw: List[float] = dataclasses.field(default_factory=list, repr=False)
+    _resident_count: Dict[int, int] = dataclasses.field(
+        default_factory=dict, repr=False
+    )  # job id -> number of held GPUs
 
     def __post_init__(self):
         if not self.gpu_residents:
             self.gpu_residents = [set() for _ in range(self.n_gpus)]
+        self.util_raw = [0.0] * self.n_gpus
+        self.mem_raw = [0.0] * self.n_gpus
+        self.peak_raw = [0.0] * self.n_gpus
+        for g, residents in enumerate(self.gpu_residents):
+            if residents:
+                raise ValueError("pre-populated gpu_residents unsupported")
+
+    # -- SKU ----------------------------------------------------------------
+
+    @property
+    def speed(self) -> float:
+        """Fleet-default throughput multiplier of this node's SKU."""
+        return self.sku.speed if self.sku else 1.0
+
+    def job_speed(self, profile: JobProfile) -> float:
+        """Throughput multiplier of ``profile`` on this node (the family's
+        per-SKU override when present, else the SKU default)."""
+        if self.sku is None:
+            return 1.0
+        return profile.speed_on(self.sku.name, self.sku.speed)
+
+    def time_factor(self, profile: JobProfile) -> float:
+        """Multiplier on reference epoch times for ``profile`` here:
+        straggler slowdown x 1/SKU speed."""
+        return self.slowdown / self.job_speed(profile)
+
+    def power_model(self, default: PowerModel) -> PowerModel:
+        return self.sku.power if self.sku else default
 
     # -- residency ---------------------------------------------------------
 
     def resident_job_ids(self) -> Set[int]:
-        out: Set[int] = set()
-        for g in self.gpu_residents:
-            out |= g
-        return out
+        return set(self._resident_count)
 
     def residents_on(self, gpu_ids: Sequence[int]) -> Set[int]:
         out: Set[int] = set()
@@ -48,47 +88,55 @@ class Node:
         return out
 
     def add_job(self, job: Job, gpu_ids: Sequence[int]) -> None:
+        p = job.profile
         for g in gpu_ids:
             self.gpu_residents[g].add(job.id)
+            self.util_raw[g] += p.gpu_util
+            self.mem_raw[g] += p.mem_util
+            self.peak_raw[g] += p.peak_mem_util
+        self._resident_count[job.id] = len(tuple(gpu_ids))
 
     def remove_job(self, job: Job) -> None:
-        for g in self.gpu_residents:
-            g.discard(job.id)
+        p = job.profile
+        for g, residents in enumerate(self.gpu_residents):
+            if job.id in residents:
+                residents.discard(job.id)
+                self.util_raw[g] -= p.gpu_util
+                self.mem_raw[g] -= p.mem_util
+                self.peak_raw[g] -= p.peak_mem_util
+                if not residents:  # squash float drift on empty GPUs
+                    self.util_raw[g] = self.mem_raw[g] = self.peak_raw[g] = 0.0
+        self._resident_count.pop(job.id, None)
 
     def is_idle(self) -> bool:
-        return not self.resident_job_ids()
+        return not self._resident_count
 
     # -- utilization / power -------------------------------------------------
 
     def gpu_util(self, jobs: Dict[int, Job], gpu: int) -> float:
-        profs = [jobs[j].profile for j in self.gpu_residents[gpu]]
-        return colocation.combined_gpu_util(profs)
+        return min(100.0, self.util_raw[gpu])
 
     def gpu_mem_util(self, jobs: Dict[int, Job], gpu: int, peak: bool = True) -> float:
-        profs = [jobs[j].profile for j in self.gpu_residents[gpu]]
-        return (
-            colocation.combined_peak_mem(profs)
-            if peak
-            else colocation.combined_mem_util(profs)
-        )
+        return min(100.0, self.peak_raw[gpu] if peak else self.mem_raw[gpu])
 
     def node_util(self, jobs: Dict[int, Job]) -> float:
         if self.n_gpus == 0:
             return 0.0
-        return sum(self.gpu_util(jobs, g) for g in range(self.n_gpus)) / self.n_gpus
+        return sum(min(100.0, u) for u in self.util_raw) / self.n_gpus
 
     def account_energy(self, now: float, jobs: Dict[int, Job], power: PowerModel):
         dt = now - self.last_account_time
         if dt > 0:
-            residents = self.resident_job_ids()
+            pm = self.power_model(power)
+            residents = self._resident_count
             if self.state == NodeState.SLEEP:
-                p = power.sleep_w
+                p = pm.sleep_w
             elif self.state == NodeState.FAILED:
                 p = 0.0
             elif not residents:
-                p = power.idle_w
+                p = pm.idle_w
             else:
-                p = power.node_power(self.node_util(jobs))
+                p = pm.node_power(self.node_util(jobs))
             kwh = p * dt / 1000.0
             self.energy_kwh += kwh
             if residents and self.state == NodeState.ON:
@@ -98,8 +146,8 @@ class Node:
                 # deallocate+allocate at the same instant attributes
                 # identically to Simulator.resize().
                 weights = {
-                    j: max(jobs[j].profile.gpu_util, 1e-6) * len(jobs[j].gpu_ids)
-                    for j in residents
+                    j: max(jobs[j].profile.gpu_util, 1e-6) * held
+                    for j, held in residents.items()
                 }
                 total_w = sum(weights.values())
                 for j, w in weights.items():

@@ -16,6 +16,7 @@ TPU jobs is the MFU-style duty cycle from the dry-run artifacts.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -82,9 +83,89 @@ class PowerModel:
         return self.node_power(gpu_util) * hours / 1000.0
 
 
+@functools.lru_cache(maxsize=None)
 def v100_power_model() -> PowerModel:
     a, b, c = _fit_quadratic()
     return PowerModel(a=a, b=b, c=c, idle_w=a, sleep_w=75.0)
+
+
+def scaled_power_model(base: PowerModel, scale: float) -> PowerModel:
+    """A node whose draw is ``scale`` x ``base`` at every utilization (same
+    concave shape; idle/sleep housekeeping scales with the platform)."""
+    return PowerModel(
+        a=base.a * scale,
+        b=base.b * scale,
+        c=base.c * scale,
+        idle_w=base.idle_w * scale,
+        sleep_w=base.sleep_w * scale,
+        max_util=base.max_util,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def a100_power_model() -> PowerModel:
+    """Stylized 8xA100 node: ~1.5x the V100 node's draw at equal duty cycle
+    (8x400 W GPUs + beefier host vs 8x300 W), with ~2x the throughput — the
+    perf/watt gap (~1.33x) that makes heterogeneous placement interesting."""
+    return scaled_power_model(v100_power_model(), 1.5)
+
+
+# --- GPU SKUs (heterogeneous fleets) ----------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUSku:
+    """A node hardware generation: calibrated power model + a fleet-default
+    throughput multiplier versus the V100 reference node (job families can
+    override it per SKU via ``JobProfile.sku_speed``)."""
+
+    name: str
+    speed: float  # epoch-time divisor vs the V100 reference node
+    power: PowerModel
+
+    @property
+    def perf_per_watt(self) -> float:
+        """Relative work per joule at full duty cycle (V100 == 1.0-ish);
+        the quantity energy-aware placement trades across the fleet."""
+        return self.speed / (self.power.node_power(100.0) / 1000.0)
+
+
+@functools.lru_cache(maxsize=None)
+def sku_registry() -> Dict[str, GPUSku]:
+    return {
+        "v100": GPUSku("v100", speed=1.0, power=v100_power_model()),
+        "a100": GPUSku("a100", speed=2.0, power=a100_power_model()),
+    }
+
+
+def get_sku(name: str) -> GPUSku:
+    try:
+        return sku_registry()[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown GPU SKU {name!r}; known: {sorted(sku_registry())}"
+        ) from None
+
+
+def fleet_skus(n_nodes: int, mix: Sequence[Tuple[str, float]]) -> Tuple[str, ...]:
+    """Deterministic per-node SKU assignment from fractional ``mix`` (e.g.
+    ``[("v100", 0.5), ("a100", 0.5)]``), interleaved round-robin by weight so
+    every contiguous slice of the fleet is representative."""
+    names = [n for n, _ in mix]
+    weights = np.array([w for _, w in mix], dtype=float)
+    if (weights <= 0).any():
+        raise ValueError(f"non-positive weight in mix {mix}")
+    for n in names:
+        get_sku(n)  # validate early
+    quota = weights / weights.sum() * n_nodes
+    filled = np.zeros(len(names))
+    out: List[str] = []
+    for _ in range(n_nodes):
+        # largest-remainder interleave: pick the most under-filled SKU
+        i = int(np.argmax(quota - filled))
+        out.append(names[i])
+        filled[i] += 1.0
+    return tuple(out)
 
 
 def tpu_v5e_power_model(chips_per_node: int = hw.CHIPS_PER_HOST) -> PowerModel:

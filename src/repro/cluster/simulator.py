@@ -25,7 +25,7 @@ from repro.cluster import colocation
 from repro.cluster.job import Job, JobProfile, JobState
 from repro.cluster.jobqueue import OrderedQueue
 from repro.cluster.node import Node, NodeState
-from repro.cluster.power import PowerModel, v100_power_model
+from repro.cluster.power import PowerModel, get_sku, v100_power_model
 from repro.elastic import scaling
 
 
@@ -55,6 +55,10 @@ class SimConfig:
     # calibration stops at 4 jobs/GPU; schedulers' admission thresholds are
     # tighter still, and resizes must not exceed what admission would allow)
     resize_max_jobs_per_gpu: int = 4
+    # heterogeneous fleet: per-node SKU names (len == n_nodes; see
+    # ``power.fleet_skus`` for mix helpers).  None = homogeneous reference
+    # fleet (the simulator-level ``power`` model, V100 by default).
+    node_skus: Optional[Tuple[str, ...]] = None
 
 
 class Simulator:
@@ -71,7 +75,19 @@ class Simulator:
         self.now = 0.0
         self._seq = 0
         self._heap: List[_Event] = []
-        self.nodes = [Node(i, cfg.gpus_per_node) for i in range(cfg.n_nodes)]
+        if cfg.node_skus is not None and len(cfg.node_skus) != cfg.n_nodes:
+            raise ValueError(
+                f"node_skus has {len(cfg.node_skus)} entries for "
+                f"{cfg.n_nodes} nodes"
+            )
+        self.nodes = [
+            Node(
+                i,
+                cfg.gpus_per_node,
+                sku=get_sku(cfg.node_skus[i]) if cfg.node_skus else None,
+            )
+            for i in range(cfg.n_nodes)
+        ]
         self.jobs: Dict[int, Job] = {}
         # arrival-ordered job ids awaiting allocation (O(1) remove/front-insert)
         self.queue = OrderedQueue()
@@ -81,12 +97,22 @@ class Simulator:
         self._epoch_event_ver: Dict[int, int] = {}
         # true inflation noise per (signature) — deterministic
         self._true_noise: Dict[Tuple[str, ...], float] = {}
+        # signature -> ground-truth inflation (pure function of the
+        # signature and the seed, so memoizable across rerates)
+        self._infl_cache: Dict[Tuple[str, ...], float] = {}
         # metrics
         self.active_node_samples: List[Tuple[float, int]] = []
         self.deadline_violations: int = 0
         self.events_processed = 0
         self._dirty = False
         self._done_count = 0
+        self._started = False  # first run() call arms failures + sampling
+        # O(active) completion-stat accumulators (results() must not rescan
+        # the full job table at 10k-job scale)
+        self._jct_sum = 0.0
+        self._jtt_sum = 0.0
+        self._wait_sum = 0.0
+        self._makespan = 0.0
         # elastic resizing
         self._pending_resize: Set[int] = set()  # job ids with a resize queued
         # per-job invalidation counter: bumped by deallocate so a pending
@@ -102,22 +128,28 @@ class Simulator:
 
     def true_inflation(self, profiles: Sequence[JobProfile]) -> float:
         """Ground truth the simulator runs on: calibrated model + job-set
-        noise (the reality EaCO's observation phase discovers)."""
-        base = colocation.inflation_factor(profiles)
+        noise (the reality EaCO's observation phase discovers).  Memoized by
+        set signature — inflation is a pure function of (signature, seed)."""
         if len(profiles) <= 1:
-            return base
+            return colocation.inflation_factor(profiles)
         sig = colocation.set_signature(profiles)
+        cached = self._infl_cache.get(sig)
+        if cached is not None:
+            return cached
         measured = colocation.paper_measured_inflation(sig)
         if measured is not None:
-            return measured  # the paper's own measured sets are exact
-        if sig not in self._true_noise:
-            # deterministic per signature ACROSS processes (python's hash()
-            # is salted per interpreter — zlib.crc32 is stable)
-            import zlib
+            out = measured  # the paper's own measured sets are exact
+        else:
+            if sig not in self._true_noise:
+                # deterministic per signature ACROSS processes (python's
+                # hash() is salted per interpreter — zlib.crc32 is stable)
+                import zlib
 
-            h = zlib.crc32(repr((sig, self.cfg.seed)).encode()) % 10_000 / 10_000.0
-            self._true_noise[sig] = (h * 2 - 1) * self.cfg.prediction_noise
-        return base * (1 + self._true_noise[sig])
+                h = zlib.crc32(repr((sig, self.cfg.seed)).encode()) % 10_000 / 10_000.0
+                self._true_noise[sig] = (h * 2 - 1) * self.cfg.prediction_noise
+            out = colocation.inflation_factor(profiles) * (1 + self._true_noise[sig])
+        self._infl_cache[sig] = out
+        return out
 
     # ------------------------------------------------------------ allocation
 
@@ -136,7 +168,7 @@ class Simulator:
             # width-aware exclusive epoch time: identical to
             # profile.epoch_hours at the reference width
             excl_h = scaling.epoch_hours_at(job.profile, len(job.gpu_ids))
-            epoch_h = excl_h * infl * node.slowdown
+            epoch_h = excl_h * infl * node.time_factor(job.profile)
             self._rate[jid] = 1.0 / epoch_h
             self._schedule_epoch_event(job)
 
@@ -410,14 +442,27 @@ class Simulator:
         return job
 
     def run(self, until: Optional[float] = None) -> None:
-        if self.cfg.node_mtbf_hours > 0:
-            for n in self.nodes:
-                self._schedule_failure(n)
-        self.push(0.0, "sample", None)
+        if not self._started:
+            # arm once: resuming a paused run must not re-schedule failures
+            # or stack duplicate sample chains
+            self._started = True
+            if self.cfg.node_mtbf_hours > 0:
+                for n in self.nodes:
+                    self._schedule_failure(n)
+            self.push(0.0, "sample", None)
         self._done_count = sum(1 for j in self.jobs.values() if j.state == JobState.DONE)
         while self._heap:
+            if self.jobs and self._done_count == len(self.jobs):
+                # everything already finished (e.g. a run() call after a
+                # pause landed past the last completion): leave trailing
+                # bookkeeping events unprocessed, exactly as the in-loop
+                # break below does
+                break
             ev = heapq.heappop(self._heap)
             if until is not None and ev.time > until:
+                # not ours to process: put it back so a later run() resumes
+                # exactly where this one paused
+                heapq.heappush(self._heap, ev)
                 break
             self.now = ev.time
             self.events_processed += 1
@@ -436,7 +481,7 @@ class Simulator:
     def _ev_sample(self, _):
         active = sum(1 for n in self.nodes if n.state == NodeState.ON)
         self.active_node_samples.append((self.now, active))
-        if any(j.state != JobState.DONE for j in self.jobs.values()):
+        if self._done_count < len(self.jobs):
             self.push(self.now + self.cfg.active_node_sample_hours, "sample", None)
 
     def _ev_arrival(self, payload):
@@ -470,6 +515,10 @@ class Simulator:
         job.finish_time = self.now
         self._done_count += 1
         self._dirty = True
+        self._jct_sum += job.jct()
+        self._jtt_sum += job.jtt()
+        self._wait_sum += job.start_time - job.arrival
+        self._makespan = max(self._makespan, job.finish_time)
         if job.finish_time > job.deadline:
             self.deadline_violations += 1
         job.node_id = None
@@ -508,6 +557,7 @@ class Simulator:
         )
         if self.cfg.node_mtbf_hours > 0:
             self._schedule_failure(node)
+        self.scheduler.on_node_freed(self, node)
 
     def _ev_retry(self, _):
         # a scheduler-requested wake-up (e.g. a narrow-admission patience
@@ -517,23 +567,32 @@ class Simulator:
     # ---------------------------------------------------------------- results
 
     def results(self) -> Dict[str, Any]:
-        done = [j for j in self.jobs.values() if j.state == JobState.DONE]
+        # completion stats come from O(1) accumulators maintained at
+        # completion time; the single remaining pass over the job table only
+        # folds static per-job counters (schedulers bump them in place) and
+        # runs once per results() call, not once per event.
+        n_done = self._done_count
         total_e = sum(n.energy_kwh for n in self.nodes)
         act = [a for _, a in self.active_node_samples]
+        undo = restart = resize = 0
+        job_e = 0.0
+        for j in self.jobs.values():
+            undo += j.undo_count
+            restart += j.restart_count
+            resize += j.resize_count
+            job_e += j.energy_kwh
         return {
             "total_energy_kwh": total_e,
-            "jobs_done": len(done),
+            "jobs_done": n_done,
             "jobs_total": len(self.jobs),
-            "avg_jct_h": float(np.mean([j.jct() for j in done])) if done else 0.0,
-            "avg_jtt_h": float(np.mean([j.jtt() for j in done])) if done else 0.0,
-            "avg_wait_h": float(np.mean([j.start_time - j.arrival for j in done]))
-            if done
-            else 0.0,
-            "makespan_h": max((j.finish_time for j in done), default=0.0),
+            "avg_jct_h": self._jct_sum / n_done if n_done else 0.0,
+            "avg_jtt_h": self._jtt_sum / n_done if n_done else 0.0,
+            "avg_wait_h": self._wait_sum / n_done if n_done else 0.0,
+            "makespan_h": self._makespan,
             "avg_active_nodes": float(np.mean(act)) if act else 0.0,
             "deadline_violations": self.deadline_violations,
-            "undo_count": sum(j.undo_count for j in self.jobs.values()),
-            "restart_count": sum(j.restart_count for j in self.jobs.values()),
-            "resize_count": sum(j.resize_count for j in self.jobs.values()),
-            "job_energy_kwh": sum(j.energy_kwh for j in self.jobs.values()),
+            "undo_count": undo,
+            "restart_count": restart,
+            "resize_count": resize,
+            "job_energy_kwh": job_e,
         }

@@ -1,7 +1,24 @@
-"""Production-like job traces for the simulator (§6.2 methodology)."""
+"""Production-like job traces for the simulator (§6.2 methodology).
+
+Two generators:
+
+  * ``generate_trace`` — the paper's synthetic mix (Poisson arrivals,
+    uniform profile pool); unchanged semantics, used by the calibration
+    benchmarks and golden tests;
+  * ``generate_production_trace`` — a Philly/Helios-style cluster workload
+    (Hu et al.; Jeon et al.): heavy-tailed log-normal durations, bursty
+    Zipf-weighted tenant (VC) sessions, a small-job-dominated width mix,
+    and failure-retry resubmissions.  Scales to 10k+ jobs and drives the
+    ``benchmarks/scale_bench.py`` heterogeneous-fleet replay.
+
+Traces are plain ``[(JobProfile, arrival_h, deadline_h)]`` lists either
+way, and round-trip through CSV (``trace_to_csv`` / ``trace_from_csv``) so
+external traces can be replayed.
+"""
 
 from __future__ import annotations
 
+import csv
 import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -95,3 +112,279 @@ def generate_trace(cfg: TraceConfig) -> List[Tuple[JobProfile, float, float]]:
 def load_into(sim, trace: Sequence[Tuple[JobProfile, float, float]]) -> None:
     for prof, arrival, deadline in trace:
         sim.add_job(prof, arrival, deadline)
+
+
+# --------------------------------------------------------- production traces
+
+# per-family A100 throughput multipliers (vs the V100 reference node):
+# compute-bound families approach the fleet-default 2x; memory/input-bound
+# families gain less — the spread that makes SKU-aware placement matter
+A100_FAMILY_SPEEDUP: Dict[str, float] = {
+    "alexnet": 1.5,  # input-pipeline bound at low duty cycle
+    "resnet18": 1.7,
+    "resnet50": 2.1,
+    "vgg16": 2.2,
+    "lm-small": 1.8,
+    "lm-medium": 2.2,
+    "lm-large": 2.4,  # dense matmul-dominated
+    "lm-moe": 1.9,  # all-to-all bound
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProductionTraceConfig:
+    """Philly/Helios-style workload knobs (defaults match the reported
+    shapes: log-normal durations spanning minutes→days, bursty per-VC
+    submission sessions, mostly-small GPU requests, ~6% failed attempts)."""
+
+    n_jobs: int = 10_000
+    seed: int = 0
+    mix: str = "mixed"  # profile family pool (see ``profile_pool``)
+    # --- arrival structure: Zipf-weighted tenants submitting in bursts
+    arrival_rate_per_hour: float = 60.0  # fleet-wide mean job rate
+    n_tenants: int = 16
+    tenant_zipf_a: float = 1.2  # tenant weight ~ 1/rank^a
+    burst_size_mean: float = 8.0  # geometric session length (jobs)
+    burst_gap_h: float = 0.02  # mean intra-session gap (hours)
+    diurnal: bool = True
+    # --- durations: heavy-tailed log-normal total runtime (hours), mapped
+    # onto each family's epoch structure by rescaling the epoch count
+    duration_mu_ln_h: float = 0.0  # ln(hours): median e^mu = 1 h
+    duration_sigma_ln_h: float = 1.6
+    min_epochs: int = 2
+    max_epochs: int = 500
+    # --- width mix (Philly: 1-4 GPU jobs dominate) and elasticity
+    width_probs: Tuple[Tuple[int, float], ...] = (
+        (1, 0.30),
+        (2, 0.25),
+        (4, 0.25),
+        (8, 0.20),
+    )
+    elastic_frac: float = 0.25  # widths may flex between w/2 and 2w
+    # --- failures: a failed attempt wastes its partial run and is
+    # resubmitted after a back-off (Philly's retry semantics)
+    failure_frac: float = 0.06
+    max_retries: int = 2
+    retry_backoff_h: float = 0.25
+    # --- SLOs (same tier semantics as TraceConfig)
+    deadline_tiers: Tuple[Tuple[float, float], ...] = (
+        (0.2, 1.15),
+        (0.5, 2.0),
+        (0.3, math.inf),
+    )
+    # emit per-family A100 speed overrides so heterogeneous fleets see a
+    # perf/watt spread instead of one uniform speedup
+    hetero_speeds: bool = True
+
+
+def _tenant_weights(cfg: ProductionTraceConfig) -> np.ndarray:
+    w = 1.0 / np.arange(1, cfg.n_tenants + 1, dtype=float) ** cfg.tenant_zipf_a
+    return w / w.sum()
+
+
+def generate_production_trace(
+    cfg: ProductionTraceConfig,
+) -> List[Tuple[JobProfile, float, float]]:
+    """Returns [(profile, arrival_h, deadline_h)], arrival-sorted.
+
+    Retried attempts of a failed job appear as separate entries: the failed
+    attempt with its epoch count truncated at the failure point (the wasted
+    work the cluster still burned energy on), the resubmission with the
+    full epoch count and the original SLO.
+    """
+    rng = np.random.Generator(np.random.PCG64(cfg.seed))
+    pool = profile_pool(cfg.mix)
+    tenant_w = _tenant_weights(cfg)
+    # each tenant runs a themed subset of families (Philly: VCs are
+    # workload-homogeneous), with occasional off-theme submissions
+    tenant_pools = [
+        rng.choice(len(pool), size=min(3, len(pool)), replace=False)
+        for _ in range(cfg.n_tenants)
+    ]
+    widths = [w for w, _ in cfg.width_probs]
+    width_p = np.array([p for _, p in cfg.width_probs])
+    width_p = width_p / width_p.sum()
+    probs = np.array([p for p, _ in cfg.deadline_tiers])
+    probs = probs / probs.sum()
+    slacks = [s for _, s in cfg.deadline_tiers]
+
+    burst_rate = cfg.arrival_rate_per_hour / cfg.burst_size_mean
+    burst_cfg = TraceConfig(
+        arrival_rate_per_hour=burst_rate, diurnal=cfg.diurnal
+    )  # reuse the thinning sampler for burst starts
+    out: List[Tuple[JobProfile, float, float]] = []
+    t_burst = 0.0
+    while len(out) < cfg.n_jobs:
+        t_burst = _next_arrival(rng, burst_cfg, t_burst)
+        tenant = int(rng.choice(cfg.n_tenants, p=tenant_w))
+        n_in_burst = 1 + int(rng.geometric(1.0 / cfg.burst_size_mean))
+        t = t_burst
+        for _ in range(n_in_burst):
+            if len(out) >= cfg.n_jobs:
+                break
+            # ---- family: themed per tenant, 20% exploration
+            if float(rng.random()) < 0.8:
+                theme = tenant_pools[tenant]
+                prof = pool[int(theme[rng.integers(len(theme))])]
+            else:
+                prof = pool[int(rng.integers(len(pool)))]
+            # ---- duration: log-normal hours -> epoch count
+            runtime_h = float(
+                rng.lognormal(cfg.duration_mu_ln_h, cfg.duration_sigma_ln_h)
+            )
+            epochs = int(
+                np.clip(
+                    round(runtime_h / prof.epoch_hours),
+                    cfg.min_epochs,
+                    cfg.max_epochs,
+                )
+            )
+            prof = dataclasses.replace(prof, epochs=epochs)
+            # ---- width (and elasticity around it)
+            w = int(widths[int(rng.choice(len(widths), p=width_p))])
+            if cfg.elastic_frac > 0 and float(rng.random()) < cfg.elastic_frac:
+                prof = scaling.reprofile(
+                    prof, w, min_gpus=max(1, w // 2), max_gpus=min(8, 2 * w)
+                )
+            else:
+                prof = scaling.reprofile(prof, w, min_gpus=w, max_gpus=w)
+            if cfg.hetero_speeds:
+                prof = dataclasses.replace(
+                    prof,
+                    sku_speed=(("a100", A100_FAMILY_SPEEDUP[prof.name]),)
+                    if prof.name in A100_FAMILY_SPEEDUP
+                    else (),
+                )
+            # ---- SLO tier
+            slack = slacks[int(rng.choice(len(slacks), p=probs))]
+            deadline = (
+                t + slack * prof.base_jct_hours if math.isfinite(slack) else math.inf
+            )
+            # ---- failure/retry structure
+            fails = 0
+            while (
+                fails < cfg.max_retries and float(rng.random()) < cfg.failure_frac
+            ):
+                fails += 1
+            t_attempt = t
+            for k in range(fails):
+                frac = float(rng.uniform(0.05, 0.8))
+                wasted = max(1, int(frac * prof.epochs))
+                out.append(
+                    (dataclasses.replace(prof, epochs=wasted), t_attempt, math.inf)
+                )
+                t_attempt += wasted * prof.epoch_hours + cfg.retry_backoff_h
+                if len(out) >= cfg.n_jobs:
+                    break
+            if len(out) < cfg.n_jobs:
+                out.append((prof, t_attempt, deadline))
+            t += float(rng.exponential(cfg.burst_gap_h))
+    out.sort(key=lambda e: e[1])
+    return out[: cfg.n_jobs]
+
+
+# ----------------------------------------------------------------- CSV I/O
+
+CSV_FIELDS = (
+    "name",
+    "epoch_hours",
+    "epochs",
+    "gpu_util",
+    "mem_util",
+    "peak_mem_util",
+    "n_gpus",
+    "min_gpus",
+    "max_gpus",
+    "scaling_c",
+    "sku_speed",  # "a100:1.8|h100:2.5" ("" = fleet defaults)
+    "arrival_h",
+    "deadline_h",  # "inf" = no SLO
+)
+
+
+def _encode_sku_speed(sku_speed: Tuple[Tuple[str, float], ...]) -> str:
+    # repr, like every other float column: the round-trip must be lossless
+    return "|".join(f"{n}:{s!r}" for n, s in sku_speed)
+
+
+def _decode_sku_speed(text: str) -> Tuple[Tuple[str, float], ...]:
+    if not text:
+        return ()
+    out = []
+    for part in text.split("|"):
+        name, _, val = part.partition(":")
+        out.append((name, float(val)))
+    return tuple(out)
+
+
+def trace_to_csv(trace: Sequence[Tuple[JobProfile, float, float]], path: str) -> None:
+    """Write a trace in the replayable CSV schema (see README)."""
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(CSV_FIELDS)
+        for prof, arrival, deadline in trace:
+            w.writerow(
+                [
+                    prof.name,
+                    repr(prof.epoch_hours),
+                    prof.epochs,
+                    repr(prof.gpu_util),
+                    repr(prof.mem_util),
+                    repr(prof.peak_mem_util),
+                    prof.n_gpus,
+                    prof.min_gpus,
+                    prof.max_gpus,
+                    repr(prof.scaling_c),
+                    _encode_sku_speed(prof.sku_speed),
+                    repr(arrival),
+                    "inf" if math.isinf(deadline) else repr(deadline),
+                ]
+            )
+
+
+def trace_from_csv(path: str) -> List[Tuple[JobProfile, float, float]]:
+    """Load a trace written by ``trace_to_csv`` (or any external trace
+    mapped onto the same schema).
+
+    The co-location machinery (history H, set signatures, memoized
+    ground-truth inflation) keys on the family ``name``, so rows sharing a
+    name must agree on the utilization columns; mixed-utilization rows
+    under one name are rejected rather than silently cross-contaminating
+    predictions.  Duration columns (``epochs``/``epoch_hours``/widths) may
+    vary freely per row.
+    """
+    out: List[Tuple[JobProfile, float, float]] = []
+    util_by_name: Dict[str, Tuple[float, float, float]] = {}
+    with open(path, newline="") as f:
+        reader = csv.DictReader(f)
+        missing = set(CSV_FIELDS) - set(reader.fieldnames or ())
+        if missing:
+            raise ValueError(f"trace CSV {path} missing columns: {sorted(missing)}")
+        for row in reader:
+            utils = (
+                float(row["gpu_util"]),
+                float(row["mem_util"]),
+                float(row["peak_mem_util"]),
+            )
+            prev = util_by_name.setdefault(row["name"], utils)
+            if prev != utils:
+                raise ValueError(
+                    f"trace CSV {path}: rows named {row['name']!r} disagree "
+                    f"on utilization columns ({prev} vs {utils}); names key "
+                    f"the co-location model, so utilizations must match"
+                )
+            prof = JobProfile(
+                name=row["name"],
+                epoch_hours=float(row["epoch_hours"]),
+                epochs=int(row["epochs"]),
+                gpu_util=float(row["gpu_util"]),
+                mem_util=float(row["mem_util"]),
+                peak_mem_util=float(row["peak_mem_util"]),
+                n_gpus=int(row["n_gpus"]),
+                min_gpus=int(row["min_gpus"]),
+                max_gpus=int(row["max_gpus"]),
+                scaling_c=float(row["scaling_c"]),
+                sku_speed=_decode_sku_speed(row["sku_speed"]),
+            )
+            out.append((prof, float(row["arrival_h"]), float(row["deadline_h"])))
+    return out

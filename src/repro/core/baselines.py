@@ -37,11 +37,19 @@ class _Base:
     def on_node_freed(self, sim, node: Node) -> None:
         pass
 
-    def _free_node(self, sim) -> Optional[Node]:
+    def _free_node(self, sim, job: Optional[Job] = None) -> Optional[Node]:
+        """First free node on a homogeneous fleet; on a heterogeneous one,
+        the free node where ``job`` runs fastest (the paper's baselines are
+        energy-oblivious — they chase JCT, not perf/watt, which is exactly
+        why they leave the hetero savings on the table)."""
+        best: Optional[Node] = None
+        best_speed = 0.0
         for node in sim.nodes:
             if node.state == NodeState.ON and node.is_idle():
-                return node
-        return None
+                speed = node.job_speed(job.profile) if job else node.speed
+                if speed > best_speed:  # strict: ties keep the first (seed order)
+                    best, best_speed = node, speed
+        return best
 
     def _alloc_whole_node(self, sim, job: Job, node: Node) -> None:
         sim.allocate(job, node.id, tuple(range(job.profile.n_gpus)))
@@ -55,7 +63,7 @@ class FIFO(_Base):
     def try_schedule(self, sim) -> None:
         while sim.queue:
             job = sim.jobs[sim.queue[0]]
-            node = self._free_node(sim)
+            node = self._free_node(sim, job)
             if node is None:
                 return  # head-of-line blocks
             self._alloc_whole_node(sim, job, node)
@@ -73,13 +81,14 @@ class FIFOPacked(_Base):
         while progressed and sim.queue:
             progressed = False
             job = sim.jobs[sim.queue[0]]
-            node = self._free_node(sim)
+            node = self._free_node(sim, job)
             if node is not None:
                 self._alloc_whole_node(sim, job, node)
                 progressed = True
                 continue
-            # pack onto the least-loaded node that fits
-            best, best_util = None, None
+            # pack onto the least-loaded node that fits; among equally
+            # loaded nodes take the one where the job runs fastest
+            best, best_key = None, None
             for node in sim.nodes:
                 if node.state != NodeState.ON:
                     continue
@@ -89,9 +98,9 @@ class FIFOPacked(_Base):
                 profs = [sim.jobs[i].profile for i in residents] + [job.profile]
                 if colocation.combined_peak_mem(profs) > self.mem_threshold:
                     continue
-                u = node.node_util(sim.jobs)
-                if best is None or u < best_util:
-                    best, best_util = node, u
+                key = (node.node_util(sim.jobs), -node.job_speed(job.profile))
+                if best is None or key < best_key:
+                    best, best_key = node, key
             if best is not None:
                 self._alloc_whole_node(sim, job, best)
                 progressed = True
@@ -110,37 +119,35 @@ class Gandiva(_Base):
         self._packed: Dict[int, float] = {}  # job id -> rate when packed
 
     def try_schedule(self, sim) -> None:
-        progressed = True
-        while progressed and sim.queue:
-            progressed = False
-            for jid in list(sim.queue):
-                job = sim.jobs[jid]
-                if job.state != JobState.QUEUED:
+        # single forward pass: packing only consumes capacity, so a job
+        # that failed earlier in the pass cannot succeed on a re-scan
+        for jid in list(sim.queue):
+            job = sim.jobs[jid]
+            if job.state != JobState.QUEUED:
+                continue
+            node = self._free_node(sim, job)
+            if node is not None:
+                self._alloc_whole_node(sim, job, node)
+                continue
+            best, best_key = None, None
+            for n in sim.nodes:
+                if n.state != NodeState.ON:
                     continue
-                node = self._free_node(sim)
-                if node is not None:
-                    self._alloc_whole_node(sim, job, node)
-                    progressed = True
+                residents = n.resident_job_ids()
+                if not residents or len(residents) >= self.max_residents:
                     continue
-                best, best_u = None, None
-                for n in sim.nodes:
-                    if n.state != NodeState.ON:
-                        continue
-                    residents = n.resident_job_ids()
-                    if not residents or len(residents) >= self.max_residents:
-                        continue
-                    profs = [sim.jobs[i].profile for i in residents] + [job.profile]
-                    u = sum(p.gpu_util for p in profs)
-                    if u > self.util_budget:
-                        continue
-                    if colocation.combined_peak_mem(profs) > self.mem_threshold:
-                        continue
-                    if best is None or u < best_u:
-                        best, best_u = n, u
-                if best is not None:
-                    self._alloc_whole_node(sim, job, best)
-                    self._packed[job.id] = 0.0
-                    progressed = True
+                profs = [sim.jobs[i].profile for i in residents] + [job.profile]
+                u = sum(p.gpu_util for p in profs)
+                if u > self.util_budget:
+                    continue
+                if colocation.combined_peak_mem(profs) > self.mem_threshold:
+                    continue
+                key = (u, -n.job_speed(job.profile))
+                if best is None or key < best_key:
+                    best, best_key = n, key
+            if best is not None:
+                self._alloc_whole_node(sim, job, best)
+                self._packed[job.id] = 0.0
 
     def on_epoch(self, sim, job: Job) -> None:
         # introspection: un-pack a job whose measured progress rate degraded

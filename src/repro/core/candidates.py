@@ -30,6 +30,10 @@ class Candidate:
     gpu_ids: Tuple[int, ...]
     utilization: float  # mean GPU utilization of the set (pre-allocation)
     resident_ids: Tuple[int, ...]
+    # SKU terms (reference-node values when the fleet is homogeneous):
+    # heterogeneity-aware rankers trade these against utilization
+    speed: float = 1.0  # job-specific throughput multiplier on this node
+    perf_per_watt: float = 1.0  # node perf per kW at full duty cycle
 
     @property
     def degree(self) -> int:
@@ -49,7 +53,9 @@ def find_candidates(
     width: Optional[int] = None,
 ) -> List[Candidate]:
     out: List[Candidate] = []
+    seen = set()  # (node_id, gpu_ids) — dedup without O(|out|) scans
     k = width or job.profile.n_gpus
+    need = job.profile.peak_mem_util * k
     for node in sim.nodes:
         if node.state == NodeState.FAILED:
             continue
@@ -57,33 +63,54 @@ def find_candidates(
             continue
         if k > node.n_gpus:
             continue
+        speed = node.job_speed(job.profile)
+        ppw = speed / (node.power_model(sim.power).node_power(100.0) / 1000.0)
+        if node.is_idle():
+            # fast path for the common empty node: every GPU is eligible at
+            # zero load, so hot == cold == the first k GPUs
+            if need <= 100.0 * k:
+                out.append(
+                    Candidate(
+                        node.id, tuple(range(k)), 0.0, (),
+                        speed=speed, perf_per_watt=ppw,
+                    )
+                )
+            continue
         eligible = []
+        residents_per = node.gpu_residents
+        util_raw, peak_raw = node.util_raw, node.peak_raw
         for g in range(node.n_gpus):
-            u = node.gpu_util(sim.jobs, g)
-            m = node.gpu_mem_util(sim.jobs, g, peak=True)
+            u = util_raw[g]
+            if u > 100.0:
+                u = 100.0
+            m = peak_raw[g]
+            if m > 100.0:
+                m = 100.0
             if u > thresholds.util or m > thresholds.mem:
                 continue  # Alg. 2 line 4: break on overloaded GPU
-            if len(node.gpu_residents[g]) > thresholds.max_residents - 1 + 1:
+            if len(residents_per[g]) > thresholds.max_residents:
                 continue
-            avail_mem = 100.0 - m
-            eligible.append((u, avail_mem, g))
+            eligible.append((u, 100.0 - m, g))
         if len(eligible) < k:
             continue
-        for pick_hot in (True, False):
-            chosen = sorted(eligible, key=lambda t: -t[0] if pick_hot else t[0])[:k]
+        eligible.sort()  # ascending utilization (ties: most free memory)
+        for chosen in (eligible[-k:], eligible[:k]):  # hottest k, coldest k
             gpu_ids = tuple(sorted(g for _, _, g in chosen))
+            key = (node.id, gpu_ids)
+            if key in seen:
+                continue
             # memory feasibility: accumulated available >= estimated demand
-            avail = sum(a for _, a, _ in chosen)
-            need = job.profile.peak_mem_util * k
-            if avail < need:
+            if sum(a for _, a, _ in chosen) < need:
                 continue
             residents = tuple(sorted(node.residents_on(gpu_ids)))
             if residents and len(residents) >= thresholds.max_residents:
                 continue
             util = sum(u for u, _, _ in chosen) / k
-            cand = Candidate(node.id, gpu_ids, util, residents)
-            if cand not in out:
-                out.append(cand)
-            if not residents:
-                break  # hot == cold on an empty node
+            seen.add(key)
+            out.append(
+                Candidate(
+                    node.id, gpu_ids, util, residents,
+                    speed=speed, perf_per_watt=ppw,
+                )
+            )
     return out

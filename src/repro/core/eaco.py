@@ -50,19 +50,28 @@ class EaCO:
         thresholds: Optional[Thresholds] = None,
         history: Optional[History] = None,
         alpha: float = 0.5,
+        queue_window: int = 0,
     ):
         self.thresholds = thresholds or Thresholds()
         self.history = history if history is not None else History()
         self.predictor = JCTPredictor(self.history)
         self.alpha = alpha
+        # production-scale knob: only the first ``queue_window`` waiting
+        # jobs are considered per pass (0 = unlimited, the paper setting).
+        # Bounds the O(queue x nodes) scan during burst backlogs at 10k-job
+        # scale without touching steady-state behaviour.
+        self.queue_window = queue_window
         self._obs: Dict[int, _Observation] = {}  # job id -> observation state
+        self._obs_by_node: Dict[int, Set[int]] = {}  # node id -> observing jobs
         self._failed: Dict[int, Set[Tuple[int, Tuple[int, ...]]]] = {}
 
     # ------------------------------------------------------------- selection
 
     def _rank(self, candidates: List[Candidate]) -> List[Candidate]:
-        """Highest utilization first (Alg. 1 line 5)."""
-        return sorted(candidates, key=lambda c: -c.utilization)
+        """Highest utilization first (Alg. 1 line 5); among equally hot
+        sets, prefer the SKU with the best perf/watt — on a heterogeneous
+        fleet the same packing decision is cheaper in joules there."""
+        return sorted(candidates, key=lambda c: (-c.utilization, -c.perf_per_watt))
 
     def _admit(self, sim, job: Job, cand: Candidate, width: Optional[int] = None) -> bool:
         residents = [sim.jobs[i] for i in cand.resident_ids]
@@ -73,7 +82,7 @@ class EaCO:
         if width:
             widths[job.id] = width
         return self.predictor.deadlines_met(
-            sim.now, [job, *residents], node.slowdown, widths=widths or None
+            sim.now, [job, *residents], node, widths=widths or None
         )
 
     def schedule_job(self, sim, job: Job, width: Optional[int] = None) -> bool:
@@ -92,6 +101,7 @@ class EaCO:
             if cand.resident_ids:
                 # tentative: observe one epoch of every co-located job
                 job.state = JobState.OBSERVING
+                self._drop_obs(job.id)  # stale window from a torn-down placement
                 self._obs[job.id] = _Observation(
                     node_id=cand.node_id,
                     gpu_ids=cand.gpu_ids,
@@ -101,8 +111,18 @@ class EaCO:
                     },
                     failed_sets=failed,
                 )
+                self._obs_by_node.setdefault(cand.node_id, set()).add(job.id)
             return True
         return False
+
+    def _drop_obs(self, jid: int) -> None:
+        obs = self._obs.pop(jid, None)
+        if obs is not None:
+            peers = self._obs_by_node.get(obs.node_id)
+            if peers is not None:
+                peers.discard(jid)
+                if not peers:
+                    del self._obs_by_node[obs.node_id]
 
     # ------------------------------------------------------------ sim hooks
 
@@ -110,26 +130,36 @@ class EaCO:
         pass  # try_schedule drains the queue after every event
 
     def try_schedule(self, sim) -> None:
-        progressed = True
-        while progressed:
-            progressed = False
-            for jid in list(sim.queue):
-                job = sim.jobs[jid]
-                if job.state != JobState.QUEUED:
-                    continue
-                if self.schedule_job(sim, job):
-                    progressed = True
+        # Single forward pass: allocation only ever consumes capacity and
+        # inflates residents, so a job that failed earlier in the pass
+        # cannot succeed later in it — the old restart-on-progress loop
+        # re-scanned the whole queue O(q) times for identical decisions.
+        ids = list(sim.queue)
+        if self.queue_window:
+            ids = ids[: self.queue_window]
+        for jid in ids:
+            job = sim.jobs[jid]
+            if job.state != JobState.QUEUED:
+                continue
+            self.schedule_job(sim, job)
         self._sleep_idle(sim)
 
     def on_epoch(self, sim, job: Job) -> None:
         # check every observation window that involves job's node
-        node_id = job.node_id
-        for jid, obs in list(self._obs.items()):
-            if obs.node_id != node_id:
-                continue
-            self._check_observation(sim, sim.jobs[jid], obs)
+        observing = self._obs_by_node.get(job.node_id)
+        if not observing:
+            return
+        for jid in list(observing):
+            obs = self._obs.get(jid)
+            if obs is not None:
+                self._check_observation(sim, sim.jobs[jid], obs)
 
     def _check_observation(self, sim, job: Job, obs: _Observation) -> None:
+        if job.state != JobState.OBSERVING or job.node_id != obs.node_id:
+            # the observed placement was torn down under us (node failure /
+            # involuntary undo re-queued the job): the window is void
+            self._drop_obs(job.id)
+            return
         node = sim.nodes[obs.node_id]
         involved = [sim.jobs[i] for i in obs.epochs_at_alloc]
         # "until one epoch has passed for all co-located jobs" (line 12)
@@ -155,11 +185,11 @@ class EaCO:
             excl_h = scaling.epoch_hours_at(
                 o.profile, len(o.gpu_ids) or o.profile.n_gpus
             )
-            epoch_h = excl_h * measured_inflation * node.slowdown
+            epoch_h = excl_h * measured_inflation * node.time_factor(o.profile)
             if sim.now + o.remaining_epochs * epoch_h > o.deadline:
                 ok = False
                 break
-        del self._obs[job.id]
+        self._drop_obs(job.id)
         if ok:
             job.state = JobState.RUNNING  # finalize (line 16)
         else:
@@ -170,7 +200,7 @@ class EaCO:
             sim.deallocate(job, to_queue=True, checkpoint=True)
 
     def on_complete(self, sim, job: Job) -> None:
-        self._obs.pop(job.id, None)
+        self._drop_obs(job.id)
         self._failed.pop(job.id, None)
 
     def on_node_freed(self, sim, node: Node) -> None:
@@ -204,5 +234,8 @@ class EaCOOcc(EaCO):
         )
 
     def _rank(self, candidates: List[Candidate]) -> List[Candidate]:
-        # deeper packing first, then hottest
-        return sorted(candidates, key=lambda c: (-c.degree, -c.utilization))
+        # deeper packing first, then hottest, then best perf/watt
+        return sorted(
+            candidates,
+            key=lambda c: (-c.degree, -c.utilization, -c.perf_per_watt),
+        )

@@ -45,8 +45,14 @@ class EaCOElastic(EaCO):
         brain_cfg: Optional[BrainConfig] = None,
         narrow_patience_h: float = 2.0,
         max_actions_per_step: int = 4,
+        queue_window: int = 0,
     ):
-        super().__init__(thresholds=thresholds, history=history, alpha=alpha)
+        super().__init__(
+            thresholds=thresholds,
+            history=history,
+            alpha=alpha,
+            queue_window=queue_window,
+        )
         self.brain = Brain(self.predictor, brain_cfg or BrainConfig())
         self.controller = ElasticController(
             self.brain, max_actions_per_step=max_actions_per_step
@@ -64,21 +70,24 @@ class EaCOElastic(EaCO):
             sim.push(sim.now + self.narrow_patience_h, "retry", None)
 
     def _try_narrow_admission(self, sim) -> None:
-        """Admit waiting elastic jobs at reduced width onto GPU fragments."""
-        progressed = True
-        while progressed:
-            progressed = False
-            for jid in list(sim.queue):
-                job = sim.jobs[jid]
-                if job.state != JobState.QUEUED or not job.profile.is_elastic:
-                    continue
-                if sim.now - job.arrival < self.narrow_patience_h:
-                    continue
-                top = min(job.profile.max_width, job.profile.n_gpus) - 1
-                for width in range(top, job.profile.min_width - 1, -1):
-                    if self.schedule_job(sim, job, width=width):
-                        progressed = True
-                        break
+        """Admit waiting elastic jobs at reduced width onto GPU fragments.
+
+        Single forward pass (same argument as ``EaCO.try_schedule``):
+        admission only consumes capacity, so re-scanning after a success
+        cannot admit a job that already failed this pass."""
+        ids = list(sim.queue)
+        if self.queue_window:
+            ids = ids[: self.queue_window]
+        for jid in ids:
+            job = sim.jobs[jid]
+            if job.state != JobState.QUEUED or not job.profile.is_elastic:
+                continue
+            if sim.now - job.arrival < self.narrow_patience_h:
+                continue
+            top = min(job.profile.max_width, job.profile.n_gpus) - 1
+            for width in range(top, job.profile.min_width - 1, -1):
+                if self.schedule_job(sim, job, width=width):
+                    break
 
     def try_schedule(self, sim) -> None:
         super().try_schedule(sim)  # EaCO pass at reference width (+ sleep)

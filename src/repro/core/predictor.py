@@ -32,26 +32,31 @@ class JCTPredictor:
 
     def predict_finish(
         self, now: float, job: Job, co_profiles: Sequence[JobProfile],
-        node_slowdown: float = 1.0, width: Optional[int] = None,
+        time_factor: float = 1.0, width: Optional[int] = None,
     ) -> float:
         """Absolute predicted completion time of ``job`` when co-located
         with ``co_profiles`` (which must include job's own profile).
+        ``time_factor`` is the node's multiplier on reference epoch times
+        (straggler slowdown / SKU speed — ``Node.time_factor(profile)``);
         ``width`` overrides the allocation width (default: the profile's
         reference width, which is exact for every rigid job)."""
         infl = self.predict_inflation(co_profiles)
         excl_h = scaling.epoch_hours_at(job.profile, width or job.profile.n_gpus)
-        epoch_h = excl_h * infl * node_slowdown
+        epoch_h = excl_h * infl * time_factor
         return now + job.remaining_epochs * epoch_h
 
     def deadlines_met(
-        self, now: float, jobs: Sequence[Job], node_slowdown: float = 1.0,
+        self, now: float, jobs: Sequence[Job], node=None,
         widths: Optional[Dict[int, int]] = None,
     ) -> bool:
         """Eq. (2): every co-located job must meet its deadline.
 
-        A job whose deadline is unmeetable even under exclusive allocation
-        (it aged out while queued) is admitted best-effort — otherwise it
-        would starve forever; its violation is still counted by the sim.
+        ``node``: the target node — per-job time factors come from its
+        straggler slowdown and SKU speed (None = reference node).  A job
+        whose deadline is unmeetable even under exclusive allocation on the
+        reference node (it aged out while queued) is admitted best-effort —
+        otherwise it would starve forever; its violation is still counted
+        by the sim.
         """
         profiles = [j.profile for j in jobs]
         for j in jobs:
@@ -59,6 +64,7 @@ class JCTPredictor:
             if exclusive_finish > j.deadline:
                 continue  # hopeless SLO: best-effort, don't block placement
             w = widths.get(j.id) if widths else None
-            if self.predict_finish(now, j, profiles, node_slowdown, w) > j.deadline:
+            tf = node.time_factor(j.profile) if node is not None else 1.0
+            if self.predict_finish(now, j, profiles, tf, w) > j.deadline:
                 return False
         return True

@@ -82,11 +82,13 @@ class Brain:
 
     # ------------------------------------------------------------- helpers
 
-    def _power(self, sim, util: float) -> float:
-        """Node draw at ``util``; an empty node sleeps (or idles) instead."""
+    def _power(self, sim, node: Node, util: float) -> float:
+        """``node``'s draw at ``util`` under its own SKU power model; an
+        empty node sleeps (or idles) instead."""
+        pm = node.power_model(sim.power)
         if util <= 1e-9:
-            return sim.power.sleep_w if self.cfg.sleeps_idle_nodes else sim.power.idle_w
-        return sim.power.node_power(min(util, 100.0))
+            return pm.sleep_w if self.cfg.sleeps_idle_nodes else pm.idle_w
+        return pm.node_power(min(util, 100.0))
 
     @staticmethod
     def _node_util(sim, node: Node, exclude: Optional[int] = None) -> float:
@@ -108,8 +110,8 @@ class Brain:
         return out
 
     def _remaining_hours(self, sim, job: Job, width: int, infl: float,
-                         slowdown: float) -> float:
-        epoch_h = scaling.epoch_hours_at(job.profile, width) * infl * slowdown
+                         time_factor: float) -> float:
+        epoch_h = scaling.epoch_hours_at(job.profile, width) * infl * time_factor
         return job.remaining_epochs * epoch_h
 
     def _inflation_at(self, sim, job: Job) -> float:
@@ -152,22 +154,28 @@ class Brain:
             infl1 = self.predictor.predict_inflation(
                 [job.profile, *(r.profile for r in co_residents)]
             )
-        t0 = self._remaining_hours(sim, job, w0, infl0, src.slowdown)
-        t1 = self._remaining_hours(sim, job, width, infl1, target.slowdown)
+        t0 = self._remaining_hours(sim, job, w0, infl0, src.time_factor(job.profile))
+        t1 = self._remaining_hours(
+            sim, job, width, infl1, target.time_factor(job.profile)
+        )
         h = max(t0, t1)
         u_src_wo = self._node_util(sim, src, exclude=job.id)
         if target.id == src.id:
             u_with0 = u_src_wo + contrib0
             u_with1 = u_src_wo + contrib1
-            e0 = self._power(sim, u_with0) * t0 + self._power(sim, u_src_wo) * (h - t0)
-            e1 = self._power(sim, u_with1) * t1 + self._power(sim, u_src_wo) * (h - t1)
+            e0 = self._power(sim, src, u_with0) * t0 + self._power(
+                sim, src, u_src_wo
+            ) * (h - t0)
+            e1 = self._power(sim, src, u_with1) * t1 + self._power(
+                sim, src, u_src_wo
+            ) * (h - t1)
             kind = "grow" if width > w0 else "shrink"
         else:
             u_tgt_wo = self._node_util(sim, target)
-            p_src_on = self._power(sim, u_src_wo + contrib0)
-            p_src_off = self._power(sim, u_src_wo)
-            p_tgt_on = self._power(sim, u_tgt_wo + contrib1)
-            p_tgt_off = self._power(sim, u_tgt_wo)
+            p_src_on = self._power(sim, src, u_src_wo + contrib0)
+            p_src_off = self._power(sim, src, u_src_wo)
+            p_tgt_on = self._power(sim, target, u_tgt_wo + contrib1)
+            p_tgt_off = self._power(sim, target, u_tgt_wo)
             e0 = (p_src_on + p_tgt_off) * t0 + (p_src_off + p_tgt_off) * (h - t0)
             e1 = (p_src_off + p_tgt_on) * t1 + (p_src_off + p_tgt_off) * (h - t1)
             # co-location inflates the target's residents: the node stays
@@ -186,9 +194,10 @@ class Brain:
                     ]
                 )
                 wr = len(r.gpu_ids)
+                tf_r = target.time_factor(r.profile)
                 dt_r = self._remaining_hours(
-                    sim, r, wr, infl_r1, target.slowdown
-                ) - self._remaining_hours(sim, r, wr, infl_r0, target.slowdown)
+                    sim, r, wr, infl_r1, tf_r
+                ) - self._remaining_hours(sim, r, wr, infl_r0, tf_r)
                 e1 += max(dt_r, 0.0) * p_tgt_on
             kind = "migrate"
         return Plan(
@@ -219,7 +228,7 @@ class Brain:
                 sim.now,
                 job,
                 [job.profile, *(r.profile for r in co_residents)],
-                target.slowdown,
+                target.time_factor(job.profile),
                 width,
             )
             # hopeless SLOs are best-effort (mirrors deadlines_met): an
@@ -239,7 +248,7 @@ class Brain:
             ]
             profiles = [r.profile, job.profile, *others]
             fin_r = pred.predict_finish(
-                sim.now, r, profiles, target.slowdown, len(r.gpu_ids)
+                sim.now, r, profiles, target.time_factor(r.profile), len(r.gpu_ids)
             )
             if fin_r > r.deadline:
                 return False
@@ -285,7 +294,13 @@ class Brain:
         plans: List[Plan] = []
         queue_depth = len(sim.queue)
         any_sleeping = any(n.state == NodeState.SLEEP for n in sim.nodes)
-        for job in sim.jobs.values():
+        # O(active): enumerate resident jobs via node residency instead of
+        # scanning the full (mostly DONE) job table at 10k-job scale
+        resident_ids = sorted(
+            {jid for n in sim.nodes for jid in n.resident_job_ids()}
+        )
+        for jid in resident_ids:
+            job = sim.jobs[jid]
             if not self._movable(sim, job):
                 continue
             src = sim.nodes[job.node_id]

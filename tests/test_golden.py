@@ -1,0 +1,105 @@
+"""Golden-metrics regression harness.
+
+Locks the headline §6.2 numbers — ``total_energy_kwh``, ``avg_jct_h``,
+``deadline_violations``, ``jobs_done`` — for EaCO, EaCO-Elastic, and the
+three paper baselines on the seeded 100-job trace, against the checked-in
+``tests/golden_metrics.json``.  Scheduler/simulator refactors that shift a
+headline number now fail loudly instead of silently drifting the paper
+reproduction.
+
+The simulator is deterministic, so tolerances are tight: they absorb only
+float-accumulation noise (e.g. a re-ordered energy sum), never behaviour
+changes.  After an *intentional* behaviour change, regenerate with:
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+
+and review the diff like any other source change.
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import TraceConfig, generate_trace, load_into
+from repro.core.baselines import FIFO, FIFOPacked, Gandiva
+from repro.core.eaco import EaCO
+from repro.core.eaco_elastic import EaCOElastic
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_metrics.json")
+
+# the seeded 100-job §6.2 trace on the 28-node reference fleet (identical
+# to benchmarks/elastic_bench.py, so BENCH numbers and goldens stay in sync)
+TRACE = TraceConfig(n_jobs=100, seed=0, elastic_frac=0.6)
+SIM = dict(n_nodes=28, seed=0)
+
+SCHEDULERS = {
+    "fifo": FIFO,
+    "fifo_packed": FIFOPacked,
+    "gandiva": Gandiva,
+    "eaco": EaCO,
+    "eaco-elastic": EaCOElastic,
+}
+
+# locked metric -> relative (float) or absolute (int) tolerance
+TOLERANCES = {
+    "total_energy_kwh": 1e-9,
+    "avg_jct_h": 1e-9,
+    "deadline_violations": 0,
+    "jobs_done": 0,
+}
+
+pytestmark = pytest.mark.slow  # nightly tier (plus any manual full run)
+
+
+def _run(name):
+    sim = Simulator(SimConfig(**SIM), SCHEDULERS[name]())
+    load_into(sim, generate_trace(TRACE))
+    sim.run(until=100_000)
+    r = sim.results()
+    return {k: r[k] for k in TOLERANCES}
+
+
+def _load_golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", sorted(SCHEDULERS))
+def test_golden_metrics(name):
+    golden = _load_golden()["schedulers"][name]
+    got = _run(name)
+    for metric, tol in TOLERANCES.items():
+        want = golden[metric]
+        if tol == 0:
+            assert got[metric] == want, (name, metric, got[metric], want)
+        else:
+            assert got[metric] == pytest.approx(want, rel=tol), (
+                name,
+                metric,
+                got[metric],
+                want,
+            )
+
+
+def _regen():
+    payload = {
+        "trace": {"n_jobs": TRACE.n_jobs, "seed": TRACE.seed,
+                  "elastic_frac": TRACE.elastic_frac},
+        "sim": SIM,
+        "schedulers": {name: _run(name) for name in sorted(SCHEDULERS)},
+    }
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}")
+    print(json.dumps(payload["schedulers"], indent=1))
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

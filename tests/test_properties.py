@@ -1,0 +1,193 @@
+"""Property-based simulator invariants (hypothesis, or the seeded stub).
+
+Deep invariants that must hold on *every* trace, not just the golden one:
+  * no GPU ever hosts more residents than ``resize_max_jobs_per_gpu``, and
+    peak memory is never oversubscribed past 100%;
+  * per-job checkpointed progress is monotone non-decreasing, live progress
+    never falls below the checkpoint, and neither exceeds the epoch budget;
+  * node and job energy are non-negative, and attributed job energy never
+    exceeds the node energy that produced it;
+  * ``OrderedQueue`` preserves arrival order across arbitrary
+    remove / front-insert / append sequences (vs a list reference model).
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.job import JobState
+from repro.cluster.jobqueue import OrderedQueue
+from repro.cluster.node import Node
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import TraceConfig, generate_trace, load_into
+from repro.core.eaco_elastic import EaCOElastic
+
+
+def _run_elastic(seed, n_jobs, n_nodes=5, node_skus=None, hooks=None):
+    """Small EaCO-Elastic sim (exercises allocate/undo/resize/migrate) with
+    optional per-allocation-change hooks."""
+    sim = Simulator(
+        SimConfig(n_nodes=n_nodes, seed=seed, node_skus=node_skus),
+        EaCOElastic(narrow_patience_h=0.5),
+    )
+    trace = generate_trace(
+        TraceConfig(n_jobs=n_jobs, seed=seed, elastic_frac=0.5)
+    )
+    load_into(sim, trace)
+    if hooks:
+        orig_add = Node.add_job
+
+        def spy_add(node, job, gpu_ids):
+            orig_add(node, job, gpu_ids)
+            hooks(sim, node)
+
+        Node.add_job = spy_add
+        try:
+            sim.run(until=50_000)
+        finally:
+            Node.add_job = orig_add
+    else:
+        sim.run(until=50_000)
+    return sim
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 1000), n_jobs=st.integers(6, 16))
+def test_gpus_never_over_allocated(seed, n_jobs):
+    """At every allocation change, every GPU stays within the calibrated
+    co-location depth and peak-memory budget."""
+
+    def check(sim, node):
+        cap = sim.cfg.resize_max_jobs_per_gpu
+        for g, residents in enumerate(node.gpu_residents):
+            assert len(residents) <= cap, (node.id, g, residents)
+            peak = sum(sim.jobs[i].profile.peak_mem_util for i in residents)
+            assert peak <= 100.0 + 1e-9, (node.id, g, peak)
+
+    sim = _run_elastic(seed, n_jobs, hooks=check)
+    r = sim.results()
+    assert r["jobs_done"] == r["jobs_total"]
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 1000), n_jobs=st.integers(6, 16))
+def test_progress_monotone_non_decreasing(seed, n_jobs):
+    """Checkpointed epochs never move backwards (undo/failure/resize may
+    only revert the *fractional* part), and live progress stays within
+    [checkpoint, epoch budget]."""
+    high_water = {}
+
+    def check(sim, node):
+        for job in sim.jobs.values():
+            ck = job.checkpointed_epochs
+            assert ck >= high_water.get(job.id, 0), job.id
+            high_water[job.id] = ck
+            assert job.epochs_done >= ck - 1e-9
+            assert job.epochs_done <= job.profile.epochs + 1e-9
+
+    _run_elastic(seed, n_jobs, hooks=check)
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 1000), n_jobs=st.integers(6, 16))
+def test_energy_non_negative_and_attributable(seed, n_jobs):
+    """Node and job energy are non-negative; total attributed job energy
+    never exceeds the node energy it was carved from.  Also holds on a
+    heterogeneous fleet."""
+    skus = ("v100", "a100", "v100", "a100", "v100")
+    sim = _run_elastic(seed, n_jobs, n_nodes=5, node_skus=skus)
+    node_e = 0.0
+    for n in sim.nodes:
+        assert n.energy_kwh >= 0.0
+        node_e += n.energy_kwh
+    job_e = 0.0
+    for j in sim.jobs.values():
+        assert j.energy_kwh >= 0.0
+        job_e += j.energy_kwh
+    assert job_e <= node_e + 1e-9
+    assert math.isfinite(node_e)
+
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(ops=st.lists(st.integers(0, 99), min_size=0, max_size=60))
+def test_ordered_queue_matches_list_model(ops):
+    """OrderedQueue == plain list under the simulator's op mix: append,
+    remove (arbitrary position), front-insert, popleft, peek."""
+    q = OrderedQueue()
+    model = []
+    next_id = 0
+    for op in ops:
+        kind = op % 5
+        if kind in (0, 1):  # append a fresh id (arrival)
+            q.append(next_id)
+            model.append(next_id)
+            next_id += 1
+        elif kind == 2 and model:  # remove an arbitrary member (allocate)
+            victim = model[op % len(model)]
+            q.remove(victim)
+            model.remove(victim)
+        elif kind == 3 and model:  # front-insert after a remove (undo)
+            victim = model[op % len(model)]
+            q.remove(victim)
+            model.remove(victim)
+            q.insert(0, victim)
+            model.insert(0, victim)
+        elif kind == 4 and model:  # popleft (FIFO service)
+            assert q.popleft() == model.pop(0)
+        # arrival order preserved at every step, under every view
+        assert list(q) == model
+        assert len(q) == len(model)
+        if model:
+            assert q[0] == model[0]
+            assert q[len(model) - 1] == model[-1]
+        for jid in model:
+            assert jid in q
+
+
+def test_ordered_queue_rejects_duplicates_and_bad_ops():
+    q = OrderedQueue([1, 2])
+    with pytest.raises(ValueError):
+        q.append(1)
+    with pytest.raises(ValueError):
+        q.remove(99)
+    with pytest.raises(NotImplementedError):
+        q.insert(1, 5)
+    with pytest.raises(IndexError):
+        q[2]
+    assert q == [1, 2]
+
+
+def test_over_allocation_is_actually_refused():
+    """The depth cap is enforced, not vacuous: a 5th co-resident on the
+    same GPUs raises (direct resize path)."""
+    from repro.elastic import scaling
+    from repro.cluster.job import paper_profiles
+
+    light = scaling.reprofile(paper_profiles()["alexnet"], 4, 2, 8)
+
+    class _Idle:
+        sleeps_idle_nodes = False
+
+        def try_schedule(self, sim):
+            pass
+
+        def on_arrival(self, sim, job):
+            pass
+
+        def on_epoch(self, sim, job):
+            pass
+
+        def on_complete(self, sim, job):
+            pass
+
+        def on_node_freed(self, sim, node):
+            pass
+
+    sim = Simulator(SimConfig(n_nodes=2, seed=0), _Idle())
+    jobs = [sim.add_job(light, 0.0, math.inf) for _ in range(5)]
+    for j in jobs[:4]:
+        sim.allocate(j, 0, (0, 1, 2, 3))
+    sim.allocate(jobs[4], 1, (0, 1, 2, 3))
+    with pytest.raises(ValueError, match="co-location degree"):
+        sim.resize(jobs[4], (0, 1, 2, 3), node_id=0)

@@ -115,6 +115,79 @@ def test_failures_recovered():
     assert r["restart_count"] > 0  # failures actually happened
 
 
+# ------------------------------------------------------- heterogeneous fleet
+
+
+def test_eaco_prefers_best_perf_per_watt_on_empty_fleet():
+    """On an idle mixed fleet every candidate ties at utilization 0, so the
+    perf/watt tie-break must steer EaCO to an A100 node."""
+    from repro.cluster.trace import load_into
+
+    sim = Simulator(
+        SimConfig(n_nodes=4, seed=0, node_skus=("v100", "v100", "a100", "v100")),
+        EaCO(),
+    )
+    job = sim.add_job(PROFILES["resnet50"], 0.0, math.inf)
+    sim.run(until=0.0)
+    assert job.node_id == 2, "EaCO should pack the best perf/watt SKU first"
+
+
+def test_baselines_chase_speed_on_hetero_fleet():
+    """The energy-oblivious baselines pick the free node where the job runs
+    fastest (JCT-greedy), not the first by id."""
+    sim = Simulator(
+        SimConfig(n_nodes=4, seed=0, node_skus=("v100", "a100", "v100", "a100")),
+        FIFO(),
+    )
+    job = sim.add_job(PROFILES["vgg16"], 0.0, math.inf)
+    sim.run(until=0.0)
+    assert sim.nodes[job.node_id].sku.name == "a100"
+    assert job.node_id == 1  # first among the fastest
+
+
+def test_hetero_fleet_end_to_end_energy_win():
+    """Same trace, same node count: a half-A100 fleet under EaCO completes
+    everything, faster and on less energy than all-V100 (the perf/watt
+    payoff the SKU-aware placement is supposed to bank)."""
+    from repro.cluster.power import fleet_skus
+
+    def run(skus):
+        trace = generate_trace(TraceConfig(n_jobs=20, seed=11))
+        sim = Simulator(SimConfig(n_nodes=8, seed=11, node_skus=skus), EaCO())
+        load_into(sim, trace)
+        sim.run(until=50_000)
+        return sim.results()
+
+    r_v = run(None)
+    r_mix = run(fleet_skus(8, (("v100", 0.5), ("a100", 0.5))))
+    assert r_mix["jobs_done"] == r_mix["jobs_total"] == 20
+    assert r_mix["avg_jct_h"] < r_v["avg_jct_h"]
+    assert r_mix["total_energy_kwh"] < r_v["total_energy_kwh"]
+
+
+def test_hetero_deadline_admission_uses_sku_speed():
+    """A co-location that would miss its SLO at V100 speed is admitted on a
+    faster SKU: deadlines_met must consult the node's time factor."""
+    from repro.core.history import History
+    from repro.core.predictor import JCTPredictor
+    from repro.cluster.node import Node
+    from repro.cluster.power import get_sku
+
+    prof = PROFILES["resnet50"]
+    # exclusively feasible (1.0x < 1.1x), but 4-way co-location inflates
+    # ~20%: misses on a V100, comfortably makes it at A100 speed
+    job = Job(id=1, profile=prof, arrival=0.0, deadline=prof.base_jct_hours * 1.1)
+    others = [
+        Job(id=10 + i, profile=PROFILES[n], arrival=0.0, deadline=math.inf)
+        for i, n in enumerate(("alexnet", "resnet18", "vgg16"))
+    ]
+    pred = JCTPredictor(History(seed_with_paper=False))
+    slow_node = Node(0, 8)
+    fast_node = Node(1, 8, sku=get_sku("a100"))
+    assert not pred.deadlines_met(0.0, [job, *others], slow_node)
+    assert pred.deadlines_met(0.0, [job, *others], fast_node)
+
+
 # ---------------------------------------------------------------- hypothesis
 
 

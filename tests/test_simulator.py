@@ -89,3 +89,79 @@ def test_energy_integral_manual():
     sim.run()
     expected = sim.power.node_power(prof.gpu_util) * prof.base_jct_hours / 1000.0
     assert abs(sim.nodes[0].energy_kwh - expected) / expected < 1e-6
+
+
+def test_run_until_resume_matches_unpaused():
+    """Regression: the first event past ``until`` used to be popped and
+    silently dropped, so a paused-then-resumed simulation lost events.
+    Pausing at arbitrary times (with failures enabled, which also used to
+    be re-armed per run() call) must reproduce the unpaused run exactly."""
+    from repro.cluster.simulator import SimConfig, Simulator
+    from repro.cluster.trace import TraceConfig, generate_trace, load_into
+    from repro.core.eaco import EaCO
+
+    def build():
+        sim = Simulator(
+            SimConfig(n_nodes=6, seed=3, node_mtbf_hours=120.0), EaCO()
+        )
+        load_into(sim, generate_trace(TraceConfig(n_jobs=20, seed=3)))
+        return sim
+
+    ref = build()
+    ref.run(until=50_000)
+    paused = build()
+    for t in (5.0, 17.5, 17.5, 40.0, 123.0):  # repeats must be harmless
+        paused.run(until=t)
+    paused.run(until=50_000)
+    ra, rb = ref.results(), paused.results()
+    assert ra.keys() == rb.keys()
+    for key in ra:
+        assert rb[key] == pytest.approx(ra[key]), key
+    assert paused.events_processed == ref.events_processed
+
+
+def test_sku_registry_and_power_models():
+    from repro.cluster.power import fleet_skus, get_sku, sku_registry
+
+    v100, a100 = get_sku("v100"), get_sku("a100")
+    assert a100.speed > v100.speed
+    # A100 draws more at equal duty cycle but does more work per joule
+    for u in (0.0, 50.0, 100.0):
+        assert a100.power.node_power(u) > v100.power.node_power(u)
+    assert a100.perf_per_watt > v100.perf_per_watt
+    with pytest.raises(KeyError):
+        get_sku("tpu-v9")
+    skus = fleet_skus(10, (("v100", 0.5), ("a100", 0.5)))
+    assert len(skus) == 10 and skus.count("v100") == 5
+    # interleaved, not blocked: both SKUs appear in the first half
+    assert len(set(skus[:4])) == 2
+    assert set(skus) <= set(sku_registry())
+
+
+def test_hetero_node_speed_and_energy():
+    """The same job on an A100 node finishes ~speedup faster and the node
+    accounts energy under the A100 power model."""
+    import dataclasses as dc
+
+    from benchmarks.fig1 import _Static
+    from repro.cluster.power import get_sku
+    from repro.cluster.simulator import SimConfig, Simulator
+
+    prof = dc.replace(paper_profiles()["resnet50"], sku_speed=(("a100", 1.8),))
+
+    def run_on(skus):
+        sim = Simulator(
+            SimConfig(n_nodes=1, seed=0, node_skus=skus), _Static([0])
+        )
+        job = sim.add_job(prof, 0.0, math.inf)
+        sim.run()
+        return sim, job
+
+    sim_v, job_v = run_on(("v100",))
+    sim_a, job_a = run_on(("a100",))
+    assert job_a.jct() == pytest.approx(job_v.jct() / 1.8)
+    pm_a = get_sku("a100").power
+    expected = pm_a.node_power(prof.gpu_util) * job_a.jct() / 1000.0
+    assert sim_a.nodes[0].energy_kwh == pytest.approx(expected, rel=1e-6)
+    # per-family override beats the SKU default (2.0) in rate terms
+    assert sim_a.nodes[0].job_speed(prof) == 1.8

@@ -13,6 +13,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# real multi-step training on CPU: this module compiles and runs trainers
+# end to end (~1 min total), so the whole file lives in the nightly tier
+pytestmark = pytest.mark.slow
+
 from repro.colocation.profiler import EarlyStageProfiler
 from repro.colocation.stepper import ColocatedJob, TemporalStepper
 from repro.configs import get_config, smoke_config

@@ -93,3 +93,132 @@ def test_elastic_frac_zero_identical_to_legacy():
     a = generate_trace(TraceConfig(n_jobs=100, seed=11))
     b = generate_trace(TraceConfig(n_jobs=100, seed=11, elastic_frac=0.0))
     assert a == b
+
+
+# ------------------------------------------------------- production traces
+
+
+def _production(n_jobs=2000, **kw):
+    from repro.cluster.trace import (
+        ProductionTraceConfig,
+        generate_production_trace,
+    )
+
+    return generate_production_trace(ProductionTraceConfig(n_jobs=n_jobs, **kw))
+
+
+def test_production_trace_shape_and_determinism():
+    a = _production(seed=1)
+    b = _production(seed=1)
+    assert a == b and len(a) == 2000
+    times = [t for _, t, _ in a]
+    assert all(tb >= ta for ta, tb in zip(times, times[1:]))  # arrival-sorted
+    assert _production(seed=2) != a
+
+
+def test_production_durations_heavy_tailed():
+    """Log-normal service times: the mean is far above the median (Philly's
+    defining skew), widths are dominated by small jobs, and epoch counts
+    stay inside the configured clip."""
+    trace = _production(seed=0)
+    runtimes = sorted(p.epochs * p.epoch_hours for p, _, _ in trace)
+    n = len(runtimes)
+    median = runtimes[n // 2]
+    mean = sum(runtimes) / n
+    assert mean > 1.5 * median
+    assert runtimes[-1] > 20 * median  # a genuine tail
+    widths = [p.n_gpus for p, _, _ in trace]
+    assert sum(1 for w in widths if w <= 4) > 0.6 * n
+    # full runs respect the clip; truncated failed attempts may be shorter
+    assert all(1 <= p.epochs <= 500 for p, _, _ in trace)
+    assert any(p.epochs >= 2 for p, _, _ in trace)
+
+
+def test_production_arrivals_bursty():
+    """Session structure: the inter-arrival CV is well above the Poisson
+    value of 1 (bursts pack many short gaps, separated by long session
+    gaps)."""
+    import numpy as np
+
+    trace = _production(seed=3)
+    times = np.array([t for _, t, _ in trace])
+    gaps = np.diff(times)
+    gaps = gaps[gaps > 0]
+    cv = gaps.std() / gaps.mean()
+    assert cv > 1.5, cv
+
+
+def test_production_trace_emits_hetero_speeds_and_retries():
+    trace = _production(seed=0)
+    with_speed = [p for p, _, _ in trace if p.sku_speed]
+    assert len(with_speed) == len(trace)  # every family has an A100 entry
+    for p, _, _ in trace[:50]:
+        assert dict(p.sku_speed)["a100"] != 1.0
+        assert p.speed_on("a100", 2.0) == dict(p.sku_speed)["a100"]
+        assert p.speed_on("v100", 1.0) == 1.0  # falls back to default
+    # failure-retry structure: some same-family resubmissions exist (the
+    # wasted attempt carries no SLO)
+    no_slo_short = [
+        p for p, _, d in trace if not math.isfinite(d) and p.epochs < 500
+    ]
+    assert no_slo_short, "expected truncated failed attempts"
+
+
+def test_trace_csv_roundtrip(tmp_path):
+    from repro.cluster.trace import trace_from_csv, trace_to_csv
+
+    trace = _production(n_jobs=300, seed=5)
+    path = str(tmp_path / "trace.csv")
+    trace_to_csv(trace, path)
+    back = trace_from_csv(path)
+    assert back == trace  # exact: repr round-trips floats losslessly
+
+
+def test_trace_csv_rejects_conflicting_same_name_utils(tmp_path):
+    """Names key the co-location model: two rows sharing a name but
+    disagreeing on utilization columns must be rejected, not silently
+    cross-contaminate the memoized inflation."""
+    import dataclasses as dc
+
+    from repro.cluster.job import paper_profiles
+    from repro.cluster.trace import trace_from_csv, trace_to_csv
+
+    p = paper_profiles()["resnet50"]
+    trace = [(p, 0.0, math.inf), (dc.replace(p, gpu_util=90.0), 1.0, math.inf)]
+    path = str(tmp_path / "conflict.csv")
+    trace_to_csv(trace, path)
+    with pytest.raises(ValueError, match="disagree"):
+        trace_from_csv(path)
+    # differing durations/widths under one name stay legal
+    ok = [(p, 0.0, math.inf), (dc.replace(p, epochs=3), 1.0, math.inf)]
+    trace_to_csv(ok, path)
+    assert trace_from_csv(path) == ok
+
+
+def test_trace_csv_rejects_missing_columns(tmp_path):
+    path = str(tmp_path / "bad.csv")
+    with open(path, "w") as f:
+        f.write("name,arrival_h\nalexnet,0.0\n")
+    from repro.cluster.trace import trace_from_csv
+
+    with pytest.raises(ValueError, match="missing columns"):
+        trace_from_csv(path)
+
+
+def test_csv_trace_replays_identically(tmp_path):
+    """A CSV-round-tripped trace must replay to identical results."""
+    from repro.cluster.simulator import SimConfig, Simulator
+    from repro.cluster.trace import load_into, trace_from_csv, trace_to_csv
+    from repro.core.eaco import EaCO
+
+    trace = _production(n_jobs=60, seed=7, arrival_rate_per_hour=20.0)
+    path = str(tmp_path / "t.csv")
+    trace_to_csv(trace, path)
+
+    def run(t):
+        sim = Simulator(SimConfig(n_nodes=8, seed=0), EaCO())
+        load_into(sim, t)
+        sim.run(until=100_000)
+        return sim.results()
+
+    assert run(trace_from_csv(path)) == run(trace)
