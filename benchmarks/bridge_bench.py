@@ -1,0 +1,120 @@
+"""Calibration-bridge benchmark: build calibration.json, replay a
+model-family trace.
+
+Runs the full ``repro.bridge`` pipeline (roofline-derived family profiles +
+dry-run co-location sweep), writes the versioned artifact to
+``benchmarks/artifacts/calibration.json``, then replays a bridge-family
+trace on the reference fleet three ways:
+
+  * ``eaco_precalibration`` — the pre-bridge state, run BEFORE the
+    calibration is installed: the simulator's ground-truth inflation for
+    every bridge signature is the analytic model plus per-signature noise,
+    and EaCO's paper-only History forces the analytic fallback everywhere;
+  * ``eaco_calibrated`` — after ``Calibration.install()``: the measured
+    sweep is simulator ground truth AND seeds History, so every calibrated
+    signature is predicted exactly from the first placement;
+  * ``fifo_packed`` — energy-blind packing comparison point (calibrated
+    universe).
+
+Headline metrics + the History hit rates land in ``BENCH_bridge.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import Row, save_json
+from repro.bridge import build_calibration
+from repro.cluster import colocation
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import TraceConfig, generate_trace, load_into
+from repro.core.baselines import FIFOPacked
+from repro.core.eaco import EaCO
+from repro.core.history import History
+
+N_JOBS = 200
+N_NODES = 28
+TRACE = TraceConfig(n_jobs=N_JOBS, seed=0, mix="bridge", elastic_frac=0.3)
+
+
+def _run_one(scheduler, trace) -> Dict:
+    sim = Simulator(SimConfig(n_nodes=N_NODES, seed=0), scheduler)
+    load_into(sim, trace)
+    t0 = time.perf_counter()
+    sim.run(until=1_000_000)
+    wall_s = time.perf_counter() - t0
+    r = sim.results()
+    out = {
+        "wall_s": round(wall_s, 2),
+        "jobs_done": r["jobs_done"],
+        "total_energy_kwh": round(r["total_energy_kwh"], 1),
+        "avg_jct_h": round(r["avg_jct_h"], 3),
+        "avg_jtt_h": round(r["avg_jtt_h"], 3),
+        "deadline_violations": r["deadline_violations"],
+        "undo_count": r["undo_count"],
+    }
+    hist = getattr(scheduler, "history", None)
+    if hist is not None:
+        total = hist.hits + hist.misses
+        out["history_len"] = len(hist)
+        out["history_hit_rate"] = round(hist.hits / total, 3) if total else None
+    return out
+
+
+def run() -> List[Row]:
+    t0 = time.perf_counter()
+    cal = build_calibration()
+    cal_s = time.perf_counter() - t0
+    cal_path = os.path.join(os.path.dirname(__file__), "artifacts", "calibration.json")
+    cal.save(cal_path)
+
+    trace = generate_trace(TRACE)
+    colocation.clear_measured()  # pre-bridge universe: analytic + noise
+    results = {"eaco_precalibration": _run_one(EaCO(history=History()), trace)}
+    history = cal.install()  # registers sim ground truth + seeds H
+    results["eaco_calibrated"] = _run_one(EaCO(history=history), trace)
+    results["fifo_packed"] = _run_one(FIFOPacked(), trace)
+    payload = {
+        "calibration": {
+            "path": "benchmarks/artifacts/calibration.json",
+            "build_s": round(cal_s, 3),
+            "n_families": len(cal.profiles),
+            "n_signatures": len(cal.signatures),
+            "version": cal.version,
+        },
+        "trace": {"n_jobs": N_JOBS, "seed": TRACE.seed, "mix": TRACE.mix,
+                  "elastic_frac": TRACE.elastic_frac},
+        "fleet": {"n_nodes": N_NODES},
+        "results": results,
+    }
+    save_json("bridge_bench.json", payload)
+    root = os.path.join(os.path.dirname(__file__), "..", "BENCH_bridge.json")
+    with open(os.path.abspath(root), "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+    c = results["eaco_calibrated"]
+    p = results["eaco_precalibration"]
+    return [
+        Row(
+            "bridge/calibration_build",
+            cal_s * 1e6,
+            f"{len(cal.profiles)} families, {len(cal.signatures)} signatures",
+        ),
+        Row(
+            "bridge/eaco_family_replay",
+            c["wall_s"] * 1e6,
+            f"energy={c['total_energy_kwh']}kWh jct={c['avg_jct_h']}h "
+            f"hit_rate={c['history_hit_rate']} "
+            f"(precalibration: {p['total_energy_kwh']}kWh jct={p['avg_jct_h']}h "
+            f"hit_rate={p['history_hit_rate']})",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

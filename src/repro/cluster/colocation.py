@@ -74,3 +74,43 @@ def paper_measured_inflation(signature: Tuple[str, ...]) -> float | None:
     epoch_co = row[3]
     singles = [PAPER_SINGLE[n][3] for n in signature]
     return epoch_co / (sum(singles) / len(singles))
+
+
+# --- calibrated (non-paper) measurements ------------------------------------
+#
+# The calibration bridge (repro.bridge) measures co-location inflation for
+# model-family sets the paper never ran, through the TemporalStepper dry-run.
+# Registering them here makes them ground truth for the simulator and a
+# trusted prediction source for the JCTPredictor, exactly like the paper's
+# own Table 3 sets — Alg. 1 line 1's "experimental measurements", grown.
+
+_CALIBRATED: Dict[Tuple[str, ...], float] = {}
+
+
+def register_measured(signature: Iterable[str], inflation: float) -> None:
+    """Register a measured inflation factor for a non-paper signature."""
+    key = tuple(sorted(signature))
+    if len(key) <= 1:
+        raise ValueError(f"signature {key} has no co-location to measure")
+    if inflation < 1.0:
+        raise ValueError(f"inflation {inflation} < 1.0 for {key}")
+    _CALIBRATED[key] = float(inflation)
+
+
+def registered_measurements() -> Dict[Tuple[str, ...], float]:
+    """Copy of the calibrated (non-paper) measurement table."""
+    return dict(_CALIBRATED)
+
+
+def clear_measured() -> None:
+    """Drop every registered calibration measurement (test hygiene)."""
+    _CALIBRATED.clear()
+
+
+def measured_inflation(signature: Tuple[str, ...]) -> float | None:
+    """Measured ground truth for a signature: the paper's Table 3 sets
+    first, then the registered calibration table; None if never measured."""
+    measured = paper_measured_inflation(signature)
+    if measured is not None:
+        return measured
+    return _CALIBRATED.get(tuple(sorted(signature)))

@@ -135,6 +135,11 @@ def sku_registry() -> Dict[str, GPUSku]:
     return {
         "v100": GPUSku("v100", speed=1.0, power=v100_power_model()),
         "a100": GPUSku("a100", speed=2.0, power=a100_power_model()),
+        # 8-chip v5e host: modestly faster than the V100 reference node for
+        # LM steps at a far lower envelope — the fleet's perf/watt outlier.
+        # Bridge-calibrated families carry per-family overrides
+        # (JobProfile.sku_speed) interpolated by how compute-bound they are.
+        "tpuv5e": GPUSku("tpuv5e", speed=1.3, power=tpu_v5e_power_model()),
     }
 
 

@@ -136,9 +136,11 @@ class Simulator:
         cached = self._infl_cache.get(sig)
         if cached is not None:
             return cached
-        measured = colocation.paper_measured_inflation(sig)
+        measured = colocation.measured_inflation(sig)
         if measured is not None:
-            out = measured  # the paper's own measured sets are exact
+            # the paper's own measured sets — and any bridge-calibrated
+            # signatures registered with cluster.colocation — are exact
+            out = measured
         else:
             if sig not in self._true_noise:
                 # deterministic per signature ACROSS processes (python's

@@ -51,12 +51,59 @@ class TraceConfig:
     elastic_widths: Tuple[int, ...] = (4, 8)  # sampled reference widths
 
 
+def known_family_profiles() -> Dict[str, JobProfile]:
+    """Every family a trace may reference by name: the paper's four CV
+    jobs, the TPU-flavour LM stand-ins, and the bridge-calibrated model
+    families (``repro.bridge``, imported lazily: the configs package pulls
+    jax, which pure-numpy trace consumers must not pay for)."""
+    out = dict(paper_profiles())
+    out.update(lm_profiles())
+    from repro.bridge import bridge_profiles
+
+    out.update(bridge_profiles())
+    return out
+
+
+def resolve_family(name: str) -> JobProfile:
+    """Profile for a family referenced by name; unknown names fail loudly
+    (a typo'd trace must not surface as a bare KeyError mid-replay).
+
+    Paper/lm families resolve without touching ``repro.bridge`` — only a
+    name outside the pure-numpy universe pays the configs/jax import.
+    """
+    cheap = dict(paper_profiles())
+    cheap.update(lm_profiles())
+    if name in cheap:
+        return cheap[name]
+    known = known_family_profiles()
+    if name not in known:
+        raise ValueError(
+            f"unknown job family {name!r}; known families: {sorted(known)}"
+        )
+    return known[name]
+
+
 def profile_pool(mix: str) -> List[JobProfile]:
+    """Profile pool for a trace mix.
+
+    ``paper`` | ``lm`` | ``mixed`` (paper+lm) | ``bridge`` (the calibrated
+    model families) | ``all`` (everything) | or a comma-separated list of
+    family names (e.g. ``"resnet50,qwen3-32b"``).  Unknown mixes and family
+    names raise ``ValueError`` naming the known families.
+    """
     if mix == "paper":
         return list(paper_profiles().values())
     if mix == "lm":
         return list(lm_profiles().values())
-    return list(paper_profiles().values()) + list(lm_profiles().values())
+    if mix == "mixed":
+        return list(paper_profiles().values()) + list(lm_profiles().values())
+    if mix == "bridge":
+        from repro.bridge import bridge_profiles
+
+        return [p for _, p in sorted(bridge_profiles().items())]
+    if mix == "all":
+        return [p for _, p in sorted(known_family_profiles().items())]
+    return [resolve_family(name.strip()) for name in mix.split(",")]
 
 
 # day/night arrival-intensity multipliers (day = first 12 h of each cycle)
@@ -248,7 +295,10 @@ def generate_production_trace(
                 )
             else:
                 prof = scaling.reprofile(prof, w, min_gpus=w, max_gpus=w)
-            if cfg.hetero_speeds:
+            if cfg.hetero_speeds and not prof.sku_speed:
+                # bridge-calibrated families already carry their derived
+                # per-SKU multipliers; only the paper/lm families take the
+                # table here (and families in neither keep fleet defaults)
                 prof = dataclasses.replace(
                     prof,
                     sku_speed=(("a100", A100_FAMILY_SPEEDUP[prof.name]),)

@@ -36,6 +36,17 @@ class EarlyStageProfiler:
         self.peak_flops = peak_flops
         self.solo_step_s: Dict[str, float] = {}
 
+    @classmethod
+    def for_stepper(cls, stepper: TemporalStepper, peak_flops: float = hw.PEAK_FLOPS_BF16):
+        """Build a profiler whose FLOPs table comes from the jobs' own
+        bundles (``AnalyticBundle.flops_per_step`` in dry-run calibration;
+        0.0 — duty reported as 0 — for bundles that don't carry a count)."""
+        flops = {
+            j.name: float(getattr(j.bundle, "flops_per_step", 0.0) or 0.0)
+            for j in stepper.jobs
+        }
+        return cls(flops, peak_flops)
+
     def profile_solo(self, stepper: TemporalStepper, steps: int = 3) -> Dict[str, Observation]:
         """Profile each job alone (exclusive baseline)."""
         out = {}

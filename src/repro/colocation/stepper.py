@@ -30,6 +30,57 @@ from repro.train.steps import TrainBundle
 
 
 @dataclasses.dataclass
+class AnalyticBundle:
+    """Dry-run stand-in for a ``TrainBundle``: no device work, virtual time.
+
+    The calibration bridge (``repro.bridge``) measures co-location inflation
+    through the SAME ``TemporalStepper``/``EarlyStageProfiler`` path a real
+    deployment uses, but in CI there are no accelerators and full-size
+    configs cannot run at all.  An ``AnalyticBundle`` closes that gap: the
+    stepper recognises it and, instead of executing a jitted step, advances
+    a virtual clock by this model of the step time under contention:
+
+        step_s(S) = solo_step_s * (1 + sum_{j in S, j != self}
+                                       (switch_base + switch_per_mem * mem_j)
+                                     + max(0, sum_duty(S) - 1))
+
+    i.e. a per-co-resident context-switch cost that grows with the peer's
+    HBM working set (bigger state => colder caches after every switch — the
+    paper's §3 explanation for why VGG16 sets inflate more than AlexNet
+    sets), plus a proportional slowdown once the summed compute duty cycle
+    oversubscribes the device.  The model is intentionally *independent* of
+    ``cluster.colocation.inflation_factor`` — it is the dry-run ground truth
+    the differential tests compare that predictor model against.
+    """
+
+    name: str
+    solo_step_s: float
+    duty_cycle_pct: float  # compute duty cycle, percent (0, 100]
+    mem_util_pct: float  # average HBM residency, percent
+    flops_per_step: float = 0.0  # per-device, for MFU-style duty reporting
+    switch_base: float = 0.018
+    switch_per_mem: float = 0.0007  # per percentage point of peer mem
+    loss0: float = 6.0  # synthetic loss curve: loss0 / (1 + 0.02 * step)
+
+    def init_state(self, seed: int = 0):
+        return (), ()  # truthy sentinels: nothing to initialise
+
+    def step_seconds(self, co_bundles: List["AnalyticBundle"]) -> float:
+        """Virtual step time when co-resident with ``co_bundles`` (which
+        includes self, mirroring the profiler's signature convention)."""
+        overhead = sum(
+            self.switch_base + self.switch_per_mem * b.mem_util_pct
+            for b in co_bundles
+            if b is not self
+        )
+        demand = sum(b.duty_cycle_pct for b in co_bundles) / 100.0
+        return self.solo_step_s * (1.0 + overhead + max(0.0, demand - 1.0))
+
+    def loss_at(self, step: int) -> float:
+        return self.loss0 / (1.0 + 0.02 * step)
+
+
+@dataclasses.dataclass
 class ColocatedJob:
     name: str
     bundle: TrainBundle
@@ -82,13 +133,19 @@ class TemporalStepper:
         for job in self.jobs:
             if job.done:
                 continue
-            batch = self._make_batch(job)
-            t0 = time.perf_counter()
-            job.params, job.opt_state, m = job.bundle.step_fn(
-                job.params, job.opt_state, batch
-            )
-            loss = float(m["loss"])  # blocks until the step finishes
-            dt = time.perf_counter() - t0
+            if isinstance(job.bundle, AnalyticBundle):
+                # dry-run: virtual step time under the live co-resident set
+                live = [j.bundle for j in self.jobs if not j.done]
+                dt = job.bundle.step_seconds(live)
+                loss = job.bundle.loss_at(job.step)
+            else:
+                batch = self._make_batch(job)
+                t0 = time.perf_counter()
+                job.params, job.opt_state, m = job.bundle.step_fn(
+                    job.params, job.opt_state, batch
+                )
+                loss = float(m["loss"])  # blocks until the step finishes
+                dt = time.perf_counter() - t0
             job.step += 1
             job.step_times.append(dt)
             job.losses.append(loss)

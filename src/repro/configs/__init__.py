@@ -42,3 +42,10 @@ ASSIGNED = [
     "seamless-m4t-large-v2",
     "jamba-1.5-large-398b",
 ]
+
+
+def families():
+    """Assigned arch configs keyed by name, in a stable (name-sorted) order —
+    the model-family universe the calibration bridge (``repro.bridge``)
+    derives cluster ``JobProfile``s for."""
+    return {name: get_config(name) for name in sorted(ASSIGNED)}

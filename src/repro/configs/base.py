@@ -244,6 +244,24 @@ class ArchConfig:
     def top_k_experts(self) -> int:
         return self.moe.top_k if self.moe else 0
 
+    # -- HBM state footprint (for the calibration bridge) ------------------
+
+    def train_state_bytes_per_chip(self, num_chips: int, n_model: int = 16) -> float:
+        """Napkin per-chip bytes of resident *training state*: bf16 weights
+        (TP-sharded; additionally data-sharded under FSDP), the fp32 grad
+        accumulator, and optimizer state (adamw m+v fp32; adafactor keeps
+        factored accumulators ~1 byte/param).  ``zero`` shards the
+        accumulator/optimizer over every chip.  Activations are NOT included
+        (they depend on the shape; see ``repro.bridge.profiles``).
+        """
+        P = self.param_count()
+        n_model = min(n_model, num_chips)
+        weights = P * 2 / (num_chips if self.fsdp else n_model)
+        opt_denom = num_chips if self.zero else n_model
+        grads = P * 4 / opt_denom
+        opt = (P * 8 if self.optimizer == "adamw" else P * 1) / opt_denom
+        return weights + grads + opt
+
 
 # ---------------------------------------------------------------------------
 # Registry

@@ -46,6 +46,31 @@ class History:
         if len(key) > 1:
             self._data[key] = inflation
 
+    def seed_from(self, measurements: Dict[Signature, float]) -> int:
+        """Bulk-seed measured signatures (the bridge's "experiment-based"
+        H growth: §5 — a larger data history gives faster, more accurate
+        estimates).  Existing entries win: a paper-measured or online-
+        observed value is never overwritten by an offline calibration.
+        Returns the number of newly-seeded signatures."""
+        added = 0
+        for sig, infl in measurements.items():
+            key = tuple(sorted(sig))
+            if len(key) > 1 and key not in self._data:
+                self._data[key] = float(infl)
+                added += 1
+        return added
+
+    @classmethod
+    def from_calibration(cls, calibration, seed_with_paper: bool = True) -> "History":
+        """History seeded from the paper tables plus a ``repro.bridge``
+        ``Calibration`` (anything with a ``signatures`` mapping)."""
+        h = cls(seed_with_paper=seed_with_paper)
+        h.seed_from(calibration.signatures)
+        return h
+
+    def signatures(self) -> Dict[Signature, float]:
+        return dict(self._data)
+
     def __len__(self) -> int:
         return len(self._data)
 

@@ -2,9 +2,13 @@
 
 Prediction sources, in order of trust:
   1. history H (measured inflation for this exact co-location signature),
-  2. the analytic co-location model (utilization-additive with degree
+  2. the calibrated measurement table (paper Table 3 sets + signatures
+     measured by the ``repro.bridge`` dry-run and registered with
+     ``cluster.colocation``),
+  3. the analytic co-location model (utilization-additive with degree
      overhead — §3's "noticeable trends"),
-with the early-stage observation phase correcting either after one epoch.
+with the early-stage observation phase correcting any of them after one
+epoch.
 """
 
 from __future__ import annotations
@@ -28,6 +32,9 @@ class JCTPredictor:
         measured = self.history.get(sig)
         if measured is not None:
             return measured
+        calibrated = colocation.measured_inflation(sig)
+        if calibrated is not None:
+            return calibrated
         return colocation.inflation_factor(profiles)
 
     def predict_finish(

@@ -235,6 +235,64 @@ def analytic_hbm_bytes(cfg, shape, num_chips: int, microbatches: int = 8) -> flo
     return P_dev + cache
 
 
+def analytic_collective_bytes(cfg, shape, num_chips: int) -> float:
+    """Napkin per-device collective bytes for one step (no HLO needed).
+
+    train:   the dominant term is the data-axis gradient reduction — each
+             device contributes its bf16 TP shard of the gradients once per
+             step (ring all-reduce wire traffic ~2x is applied by the caller
+             via the same convention as ``CollectiveStats.wire_bytes``) —
+             plus one activation all-gather/reduce pair per layer boundary
+             for the TP layout.
+    serve:   per-layer activation collectives only.
+    """
+    n_model = min(16, num_chips)
+    n_data = max(num_chips // n_model, 1)
+    grad_bytes = (
+        cfg.param_count() * 2 / n_model
+        if (shape.kind == "train" and n_data > 1)
+        else 0.0
+    )
+    L = cfg.num_layers + (cfg.encoder_layers if cfg.enc_dec else 0)
+    tokens_dev = shape.global_batch * shape.seq_len / max(n_data, 1)
+    act_bytes = 2 * L * tokens_dev * cfg.d_model * 2 if n_model > 1 else 0.0
+    return grad_bytes + act_bytes
+
+
+def analytic_roofline(cfg, shape, num_chips: int, microbatches: int = 8) -> Roofline:
+    """Roofline for a cell with NO compiled artifact: every term comes from
+    the analytic cost model (``model_flops_for_cell`` / ``analytic_hbm_bytes``
+    / ``analytic_collective_bytes``).
+
+    This is the calibration bridge's fast path (``repro.bridge``): it derives
+    per-family JobProfiles in microseconds, without lowering or compiling
+    anything, so the pipeline runs in CI on machines without accelerators.
+    Where a dry-run artifact exists its measured roofline should be
+    preferred; the two agree on the bottleneck classification for every
+    artifact checked in under ``benchmarks/artifacts/dryrun``.
+    """
+    mf_global = model_flops_for_cell(cfg, shape)
+    flops = mf_global / num_chips
+    nbytes = analytic_hbm_bytes(cfg, shape, num_chips, microbatches=microbatches)
+    coll = analytic_collective_bytes(cfg, shape, num_chips)
+    compute_s = flops / hw.PEAK_FLOPS_BF16
+    memory_s = nbytes / hw.HBM_BW
+    collective_s = coll / hw.ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    return Roofline(
+        flops=flops,
+        bytes_accessed=nbytes,
+        collective_bytes=coll,
+        collective_counts={},
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=max(terms, key=terms.get),
+        model_flops=flops,
+        useful_ratio=1.0,  # by construction: the analytic terms ARE model flops
+    )
+
+
 def model_flops_for_cell(cfg, shape) -> float:
     """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D forward-only (N = active)."""
     n_active = cfg.param_count(active_only=True)

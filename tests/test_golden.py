@@ -2,10 +2,17 @@
 
 Locks the headline §6.2 numbers — ``total_energy_kwh``, ``avg_jct_h``,
 ``deadline_violations``, ``jobs_done`` — for EaCO, EaCO-Elastic, and the
-three paper baselines on the seeded 100-job trace, against the checked-in
-``tests/golden_metrics.json``.  Scheduler/simulator refactors that shift a
-headline number now fail loudly instead of silently drifting the paper
-reproduction.
+three paper baselines, against the checked-in ``tests/golden_metrics.json``,
+on two traces:
+
+  * the seeded 100-job paper-mix trace (the §6.2 reproduction), and
+  * a 60-job model-family trace (``mix="bridge"``) replayed under the
+    installed ``repro.bridge`` calibration — measured inflations as
+    simulator ground truth, calibration-seeded History for the EaCO
+    variants ("family_schedulers" in the JSON).
+
+Scheduler/simulator refactors that shift a headline number now fail loudly
+instead of silently drifting the paper reproduction.
 
 The simulator is deterministic, so tolerances are tight: they absorb only
 float-accumulation noise (e.g. a re-ordered energy sum), never behaviour
@@ -33,6 +40,9 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_metrics.json")
 # the seeded 100-job §6.2 trace on the 28-node reference fleet (identical
 # to benchmarks/elastic_bench.py, so BENCH numbers and goldens stay in sync)
 TRACE = TraceConfig(n_jobs=100, seed=0, elastic_frac=0.6)
+# the calibrated model-family trace (shares the elastic_frac with
+# benchmarks/bridge_bench.py; smaller job count keeps the nightly fast)
+FAMILY_TRACE = TraceConfig(n_jobs=60, seed=0, mix="bridge", elastic_frac=0.3)
 SIM = dict(n_nodes=28, seed=0)
 
 SCHEDULERS = {
@@ -62,15 +72,33 @@ def _run(name):
     return {k: r[k] for k in TOLERANCES}
 
 
+def _run_family(name):
+    """One scheduler on the bridge-family trace, in the calibrated
+    universe: install() registers the measured inflations as ground truth;
+    the EaCO variants also start from the calibration-seeded History."""
+    from repro.bridge import build_calibration
+    from repro.cluster import colocation
+
+    try:
+        history = build_calibration().install()
+        kwargs = {"history": history} if name in ("eaco", "eaco-elastic") else {}
+        sim = Simulator(SimConfig(**SIM), SCHEDULERS[name](**kwargs))
+        load_into(sim, generate_trace(FAMILY_TRACE))
+        sim.run(until=100_000)
+        r = sim.results()
+        return {k: r[k] for k in TOLERANCES}
+    finally:
+        # the registry is process-global: don't leak the calibrated
+        # universe into tests that expect the analytic+noise one
+        colocation.clear_measured()
+
+
 def _load_golden():
     with open(GOLDEN_PATH) as f:
         return json.load(f)
 
 
-@pytest.mark.parametrize("name", sorted(SCHEDULERS))
-def test_golden_metrics(name):
-    golden = _load_golden()["schedulers"][name]
-    got = _run(name)
+def _check(golden, got, name):
     for metric, tol in TOLERANCES.items():
         want = golden[metric]
         if tol == 0:
@@ -84,18 +112,40 @@ def test_golden_metrics(name):
             )
 
 
+@pytest.mark.parametrize("name", sorted(SCHEDULERS))
+def test_golden_metrics(name):
+    _check(_load_golden()["schedulers"][name], _run(name), name)
+
+
+@pytest.mark.parametrize("name", sorted(SCHEDULERS))
+def test_golden_family_metrics(name):
+    """The calibrated model-family replay is locked for every scheduler."""
+    _check(
+        _load_golden()["family_schedulers"][name],
+        _run_family(name),
+        f"family/{name}",
+    )
+
+
 def _regen():
     payload = {
         "trace": {"n_jobs": TRACE.n_jobs, "seed": TRACE.seed,
                   "elastic_frac": TRACE.elastic_frac},
+        "family_trace": {"n_jobs": FAMILY_TRACE.n_jobs,
+                         "seed": FAMILY_TRACE.seed, "mix": FAMILY_TRACE.mix,
+                         "elastic_frac": FAMILY_TRACE.elastic_frac},
         "sim": SIM,
         "schedulers": {name: _run(name) for name in sorted(SCHEDULERS)},
+        "family_schedulers": {
+            name: _run_family(name) for name in sorted(SCHEDULERS)
+        },
     }
     with open(GOLDEN_PATH, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {GOLDEN_PATH}")
     print(json.dumps(payload["schedulers"], indent=1))
+    print(json.dumps(payload["family_schedulers"], indent=1))
 
 
 if __name__ == "__main__":

@@ -8,7 +8,10 @@ Deep invariants that must hold on *every* trace, not just the golden one:
   * node and job energy are non-negative, and attributed job energy never
     exceeds the node energy that produced it;
   * ``OrderedQueue`` preserves arrival order across arbitrary
-    remove / front-insert / append sequences (vs a list reference model).
+    remove / front-insert / append sequences (vs a list reference model);
+  * calibration-bridge outputs are physical: utilizations in (0, 100],
+    positive epoch times, dry-run inflation monotone non-decreasing in
+    co-location degree, and ``calibration.json`` round-trips losslessly.
 """
 
 import math
@@ -156,6 +159,74 @@ def test_ordered_queue_rejects_duplicates_and_bad_ops():
     with pytest.raises(IndexError):
         q[2]
     assert q == [1, 2]
+
+
+# ------------------------------------------------- calibration bridge
+
+
+def test_bridge_profiles_are_physical():
+    """Every auto-profiled family is schedulable: utilizations in
+    (0, 100], avg mem <= peak mem, positive epoch time and budget, scaling
+    coefficient in the calibrated band, positive per-SKU speedups against
+    registered SKUs."""
+    from repro.bridge import bridge_profiles
+    from repro.cluster.power import sku_registry
+
+    profiles = bridge_profiles()
+    assert len(profiles) >= 8
+    for name, p in profiles.items():
+        assert p.name == name
+        assert 0.0 < p.gpu_util <= 100.0, name
+        assert 0.0 < p.mem_util <= 100.0, name
+        assert p.mem_util <= p.peak_mem_util <= 100.0, name
+        assert p.epoch_hours > 0.0 and p.epochs >= 1, name
+        assert p.base_jct_hours > 0.0, name
+        assert 0.0 < p.scaling_c <= 0.08, name
+        assert p.sku_speed, name
+        for sku, speed in p.sku_speed:
+            assert sku in sku_registry(), (name, sku)
+            assert speed > 0.0, (name, sku)
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000))
+def test_bridge_inflation_monotone_in_degree(seed):
+    """Dry-run measured inflation never decreases as the co-location set
+    grows (nested 2- => 3- => 4-way chains over random family picks)."""
+    import numpy as np
+
+    from repro.bridge import bridge_profiles, measure_signature
+
+    pool = [p for _, p in sorted(bridge_profiles().items())]
+    rng = np.random.default_rng(seed)
+    chain = [pool[i] for i in rng.choice(len(pool), size=4, replace=False)]
+    prev = 1.0
+    for k in (2, 3, 4):
+        infl = measure_signature(chain[:k])
+        assert infl >= prev - 1e-12, ([p.name for p in chain[:k]], prev, infl)
+        prev = infl
+    assert prev > 1.0  # 4-way sharing is never free
+
+
+def test_calibration_save_load_roundtrip(tmp_path):
+    """calibration.json round-trips losslessly, and a version mismatch is
+    rejected with the regeneration hint instead of misreading the file."""
+    import json
+
+    from repro.bridge import Calibration, build_calibration
+
+    cal = build_calibration()
+    path = tmp_path / "calibration.json"
+    cal.save(str(path))
+    back = Calibration.load(str(path))
+    assert back.profiles == cal.profiles
+    assert back.signatures == cal.signatures
+    assert back.version == cal.version
+    payload = json.loads(path.read_text())
+    payload["version"] = 99
+    path.write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="version"):
+        Calibration.load(str(path))
 
 
 def test_over_allocation_is_actually_refused():

@@ -205,6 +205,85 @@ def test_trace_csv_rejects_missing_columns(tmp_path):
         trace_from_csv(path)
 
 
+def test_trace_csv_empty_roundtrip(tmp_path):
+    """An empty trace round-trips: header-only CSV in, [] out."""
+    from repro.cluster.trace import trace_from_csv, trace_to_csv
+
+    path = str(tmp_path / "empty.csv")
+    trace_to_csv([], path)
+    assert trace_from_csv(path) == []
+
+
+def test_trace_csv_resubmission_chain_roundtrip(tmp_path):
+    """A failure-retry chain (truncated attempts + full resubmission under
+    one family name) survives the CSV round-trip exactly — same profiles,
+    arrival order, and the no-SLO markers on the wasted attempts."""
+    import dataclasses as dc
+
+    from repro.cluster.job import paper_profiles
+    from repro.cluster.trace import trace_from_csv, trace_to_csv
+
+    p = paper_profiles()["resnet50"]
+    chain = [
+        (dc.replace(p, epochs=12), 0.0, math.inf),  # failed attempt 1
+        (dc.replace(p, epochs=40), 5.2, math.inf),  # failed attempt 2
+        (p, 21.7, 150.0),  # resubmission, original SLO
+    ]
+    path = str(tmp_path / "chain.csv")
+    trace_to_csv(chain, path)
+    back = trace_from_csv(path)
+    assert back == chain
+    assert [q.epochs for q, _, _ in back] == [12, 40, p.epochs]
+    assert [math.isinf(d) for _, _, d in back] == [True, True, False]
+
+
+def test_unknown_family_raises_clear_error():
+    """A typo'd family name in a trace mix fails loudly with the known
+    families listed — never a bare KeyError mid-generation."""
+    from repro.cluster.trace import (
+        TraceConfig,
+        generate_trace,
+        profile_pool,
+        resolve_family,
+    )
+
+    with pytest.raises(ValueError, match="unknown job family 'resnet51'"):
+        resolve_family("resnet51")
+    with pytest.raises(ValueError, match="known families"):
+        profile_pool("alexnet,not-a-model")
+    with pytest.raises(ValueError, match="unknown job family"):
+        generate_trace(TraceConfig(n_jobs=3, mix="definitely-not-a-mix"))
+
+
+def test_family_name_mixes_and_bridge_pool():
+    """Mixes may name families directly (order-preserving), and the bridge
+    mix exposes the calibrated model families in a stable order."""
+    from repro.cluster.trace import generate_trace, profile_pool, TraceConfig
+
+    pool = profile_pool("resnet50, qwen3-32b")
+    assert [p.name for p in pool] == ["resnet50", "qwen3-32b"]
+    bridge = profile_pool("bridge")
+    names = [p.name for p in bridge]
+    assert len(bridge) >= 8 and names == sorted(names)
+    assert all(p.sku_speed for p in bridge)  # calibrated SKU multipliers
+    everything = profile_pool("all")
+    assert {p.name for p in everything} >= set(names) | {"resnet50", "lm-moe"}
+    # bridge families flow through generation with their own sku_speed
+    trace = generate_trace(TraceConfig(n_jobs=20, seed=1, mix="bridge"))
+    assert all(q.sku_speed for q, _, _ in trace)
+
+
+def test_production_trace_keeps_bridge_sku_speeds():
+    """hetero_speeds must not wipe the calibrated per-SKU multipliers that
+    bridge families carry (the A100 table covers paper/lm families only)."""
+    trace = _production(n_jobs=300, seed=2, mix="bridge")
+    from repro.bridge import bridge_profiles
+
+    derived = {n: dict(p.sku_speed) for n, p in bridge_profiles().items()}
+    for q, _, _ in trace:
+        assert dict(q.sku_speed) == derived[q.name], q.name
+
+
 def test_csv_trace_replays_identically(tmp_path):
     """A CSV-round-tripped trace must replay to identical results."""
     from repro.cluster.simulator import SimConfig, Simulator
