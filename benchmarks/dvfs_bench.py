@@ -1,0 +1,143 @@
+"""DVFS / power-cap benchmark: EaCO vs EaCO-PowerCap on the 10k-job trace.
+
+Replays the same Philly-style heterogeneous V100/A100 trace as
+``scale_bench.py`` under (a) uncapped EaCO — the frequency-oblivious
+reference, whose observed peak fleet draw defines the cap levels — and
+(b) ``EaCOPowerCap`` at three cluster power caps (90% / 80% / 70% of that
+peak).  Records energy, JCT, peak draw, and throttle/raise activity per
+level to ``benchmarks/artifacts/dvfs_bench.json`` and the repo-root
+``BENCH_dvfs.json`` trajectory file.
+
+Acceptance targets (ISSUE 5): at the 80% cap, EaCO-PowerCap finishes the
+trace with less total energy than uncapped EaCO, at most +5% average JCT,
+and a peak fleet draw that never exceeds the cap at any event timestamp.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import Row, save_json
+from repro.cluster.power import fleet_skus
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import ProductionTraceConfig, generate_production_trace, load_into
+from repro.core.eaco import EaCO
+from repro.core.eaco_powercap import EaCOPowerCap
+
+N_JOBS = 10_000
+N_NODES = 96
+SKU_MIX = (("v100", 0.5), ("a100", 0.5))
+QUEUE_WINDOW = 64  # same backlog-scan bound as scale_bench.py
+CAP_FRACTIONS = (0.9, 0.8, 0.7)
+
+TRACE = ProductionTraceConfig(
+    n_jobs=N_JOBS,
+    seed=0,
+    arrival_rate_per_hour=40.0,
+    duration_mu_ln_h=-0.5,
+    duration_sigma_ln_h=1.4,
+)
+
+
+def _run_one(scheduler, trace, power_cap_w: float = 0.0) -> Dict:
+    sim = Simulator(
+        SimConfig(
+            n_nodes=N_NODES,
+            seed=0,
+            node_skus=fleet_skus(N_NODES, SKU_MIX),
+            power_cap_w=power_cap_w,
+        ),
+        scheduler,
+    )
+    load_into(sim, trace)
+    t0 = time.perf_counter()
+    sim.run(until=1_000_000)
+    wall_s = time.perf_counter() - t0
+    r = sim.results()
+    return {
+        "wall_s": round(wall_s, 2),
+        "events": sim.events_processed,
+        "jobs_done": r["jobs_done"],
+        "jobs_total": r["jobs_total"],
+        "total_energy_kwh": round(r["total_energy_kwh"], 1),
+        "avg_jct_h": round(r["avg_jct_h"], 4),
+        "avg_jtt_h": round(r["avg_jtt_h"], 4),
+        "makespan_h": round(r["makespan_h"], 1),
+        "deadline_violations": r["deadline_violations"],
+        "peak_fleet_power_w": round(r["peak_fleet_power_w"], 1),
+        "power_cap_w": round(r["power_cap_w"], 1),
+        "cap_exceeded": bool(
+            power_cap_w > 0 and r["peak_fleet_power_w"] > power_cap_w + 1e-6
+        ),
+        "freq_change_count": r["freq_change_count"],
+        "cap_throttle_count": r["cap_throttle_count"],
+        "cap_raise_count": r["cap_raise_count"],
+        "cap_infeasible_events": r["cap_infeasible_events"],
+    }
+
+
+def run() -> List[Row]:
+    trace = generate_production_trace(TRACE)
+    base = _run_one(EaCO(queue_window=QUEUE_WINDOW), trace)
+    peak = base["peak_fleet_power_w"]
+
+    capped: Dict[str, Dict] = {}
+    for frac in CAP_FRACTIONS:
+        cap_w = peak * frac
+        r = _run_one(
+            EaCOPowerCap(queue_window=QUEUE_WINDOW), trace, power_cap_w=cap_w
+        )
+        r["cap_fraction"] = frac
+        r["energy_delta_pct"] = round(
+            (r["total_energy_kwh"] / base["total_energy_kwh"] - 1) * 100, 2
+        )
+        r["jct_delta_pct"] = round(
+            (r["avg_jct_h"] / base["avg_jct_h"] - 1) * 100, 2
+        )
+        capped[f"cap_{int(frac * 100)}"] = r
+
+    payload = {
+        "trace": {"n_jobs": N_JOBS, "seed": TRACE.seed,
+                  "generator": "philly_style_production"},
+        "fleet": {"n_nodes": N_NODES, "sku_mix": [list(m) for m in SKU_MIX]},
+        "queue_window": QUEUE_WINDOW,
+        "uncapped_eaco": base,
+        "eaco_powercap": capped,
+        "acceptance": {
+            "cap_80_saves_energy": capped["cap_80"]["total_energy_kwh"]
+            < base["total_energy_kwh"],
+            "cap_80_jct_within_5pct": capped["cap_80"]["jct_delta_pct"] <= 5.0,
+            "cap_never_exceeded": not any(
+                r["cap_exceeded"] for r in capped.values()
+            ),
+        },
+    }
+    save_json("dvfs_bench.json", payload)
+    root = os.path.join(os.path.dirname(__file__), "..", "BENCH_dvfs.json")
+    with open(os.path.abspath(root), "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+    rows = []
+    for key, r in capped.items():
+        rows.append(
+            Row(
+                f"dvfs/{key}_10k_hetero",
+                r["wall_s"] * 1e6,
+                f"energy={r['total_energy_kwh']}kWh ({r['energy_delta_pct']:+.1f}%) "
+                f"jct={r['avg_jct_h']}h ({r['jct_delta_pct']:+.1f}%) "
+                f"peak={r['peak_fleet_power_w']}W cap={r['power_cap_w']}W "
+                f"throttles={r['cap_throttle_count']} "
+                f"(eaco uncapped {base['total_energy_kwh']}kWh, "
+                f"peak {peak}W)",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

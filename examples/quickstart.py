@@ -1,8 +1,8 @@
 """Quickstart: EaCO scheduling a trace, end to end, in under a minute.
 
-Runs the calibrated cluster simulator with the paper's four baselines and
-EaCO on a small trace, then shows the single-node co-location experiment
-(the paper's Fig. 1) for one job pair.
+Runs the calibrated cluster simulator on a small trace with the paper's
+baselines, EaCO, and the beyond-paper variants (EaCO-Elastic's resize
+levers, EaCO-PowerCap's energy-per-epoch frequency choice).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,6 +17,7 @@ from repro.cluster.trace import TraceConfig, generate_trace, load_into
 from repro.core.baselines import FIFO, FIFOPacked, Gandiva
 from repro.core.eaco import EaCO
 from repro.core.eaco_elastic import EaCOElastic
+from repro.core.eaco_powercap import EaCOPowerCap
 
 
 def main() -> None:
@@ -34,6 +35,7 @@ def main() -> None:
         ("gandiva", Gandiva()),
         ("eaco", EaCO()),
         ("eaco-elastic", EaCOElastic()),
+        ("eaco-powercap", EaCOPowerCap()),
     ]:
         sim = Simulator(SimConfig(n_nodes=16, seed=3), sched)
         load_into(sim, trace)

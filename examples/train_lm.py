@@ -2,9 +2,13 @@
 fault-tolerant trainer (checkpoint/restore exercised mid-run).
 
   PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Set ``REPRO_EXAMPLES_FAST=1`` (the CI examples gate) for a 60-step smoke
+run (still crossing a checkpoint boundary).
 """
 
 import argparse
+import os
 import pathlib
 import sys
 import tempfile
@@ -19,7 +23,11 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
+    # fast mode still crosses a checkpoint boundary (ckpt_every_steps=25)
+    # so the preemption/restore path stays exercised
+    fast = bool(int(os.environ.get("REPRO_EXAMPLES_FAST", "0")))
+    default_steps = 60 if fast else 200
+    ap.add_argument("--steps", type=int, default=default_steps)
     ap.add_argument("--arch", default="mamba2-370m")
     args = ap.parse_args()
 

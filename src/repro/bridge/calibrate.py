@@ -153,6 +153,8 @@ class Calibration:
     # -- persistence -------------------------------------------------------
 
     def save(self, path: str) -> None:
+        """Write the versioned calibration artifact (sorted, stable JSON
+        — the checked-in ``benchmarks/artifacts/calibration.json``)."""
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         payload = {
             "version": self.version,
@@ -178,6 +180,7 @@ class Calibration:
 
     @classmethod
     def load(cls, path: str) -> "Calibration":
+        """Load a calibration artifact, refusing version mismatches."""
         with open(path) as f:
             payload = json.load(f)
         if payload.get("version") != CALIBRATION_VERSION:

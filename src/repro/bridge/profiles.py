@@ -123,6 +123,7 @@ _CACHE: Dict[str, JobProfile] = {}
 
 
 def bridge_profiles() -> Dict[str, JobProfile]:
+    """Memoized roofline-derived ``JobProfile`` per model family."""
     if not _CACHE:
         _CACHE.update(derive_profiles())
     return dict(_CACHE)

@@ -34,10 +34,12 @@ def combined_gpu_util(profiles: Sequence[JobProfile]) -> float:
 
 
 def combined_mem_util(profiles: Sequence[JobProfile]) -> float:
+    """Additive average-memory composition, saturating at 100%."""
     return min(100.0, sum(p.mem_util for p in profiles))
 
 
 def combined_peak_mem(profiles: Sequence[JobProfile]) -> float:
+    """Additive peak-memory composition, saturating at 100%."""
     return min(100.0, sum(p.peak_mem_util for p in profiles))
 
 
@@ -59,10 +61,13 @@ def inflation_factor(profiles: Sequence[JobProfile]) -> float:
 
 
 def epoch_hours_colocated(job: JobProfile, others: Sequence[JobProfile]) -> float:
+    """``job``'s inflated epoch time when sharing with ``others``."""
     return job.epoch_hours * inflation_factor([job, *others])
 
 
 def set_signature(profiles: Iterable[JobProfile]) -> Tuple[str, ...]:
+    """Canonical (sorted family names) key of a co-located set — what the
+    history H, the calibration table and the inflation memos key on."""
     return tuple(sorted(p.name for p in profiles))
 
 

@@ -49,18 +49,22 @@ class JobProfile:
 
     @property
     def base_jct_hours(self) -> float:
+        """Exclusive-allocation JCT at the reference width (hours)."""
         return self.epoch_hours * self.epochs
 
     @property
     def min_width(self) -> int:
+        """Smallest legal allocation width (``n_gpus`` when rigid)."""
         return self.min_gpus or self.n_gpus
 
     @property
     def max_width(self) -> int:
+        """Largest legal allocation width (``n_gpus`` when rigid)."""
         return self.max_gpus or self.n_gpus
 
     @property
     def is_elastic(self) -> bool:
+        """Whether the job accepts resizes (min width < max width)."""
         return self.min_width < self.max_width
 
 
@@ -98,6 +102,8 @@ def lm_profiles() -> Dict[str, JobProfile]:
 
 
 class JobState:
+    """Job lifecycle states (queued / observing / running / done)."""
+
     QUEUED = "queued"
     OBSERVING = "observing"  # EaCO early-stage observation window
     RUNNING = "running"
@@ -125,9 +131,11 @@ class Job:
 
     @property
     def remaining_epochs(self) -> float:
+        """Epochs still to run (total minus progress so far)."""
         return self.profile.epochs - self.epochs_done
 
     def jct(self) -> float:
+        """Job Completion Time: runtime from first start to finish (hours)."""
         assert self.finish_time is not None and self.start_time is not None
         return self.finish_time - self.start_time
 

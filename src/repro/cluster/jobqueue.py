@@ -18,6 +18,9 @@ from typing import Iterable, Iterator
 
 
 class OrderedQueue:
+    """List-semantics wait queue with O(1) append / remove / front-insert
+    (see the module docstring for why the plain list went quadratic)."""
+
     __slots__ = ("_od",)
 
     def __init__(self, items: Iterable[int] = ()):
@@ -26,11 +29,13 @@ class OrderedQueue:
     # -- list-compatible surface (what schedulers actually call) -----------
 
     def append(self, jid: int) -> None:
+        """Enqueue ``jid`` at the back (errors if already queued)."""
         if jid in self._od:
             raise ValueError(f"job {jid} already queued")
         self._od[jid] = None
 
     def appendleft(self, jid: int) -> None:
+        """Enqueue ``jid`` at the front (errors if already queued)."""
         if jid in self._od:
             raise ValueError(f"job {jid} already queued")
         self._od[jid] = None
@@ -43,12 +48,14 @@ class OrderedQueue:
         self.appendleft(jid)
 
     def remove(self, jid: int) -> None:
+        """Drop ``jid`` from anywhere in the queue (ValueError if absent)."""
         try:
             del self._od[jid]
         except KeyError:
             raise ValueError(f"job {jid} not in queue") from None
 
     def popleft(self) -> int:
+        """Dequeue and return the head job id."""
         jid, _ = self._od.popitem(last=False)
         return jid
 

@@ -13,11 +13,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.cluster import dvfs
 from repro.cluster.job import Job, JobProfile
 from repro.cluster.power import GPUSku, PowerModel
 
 
 class NodeState:
+    """Node lifecycle states (powered on / low-power sleep / failed)."""
+
     ON = "on"
     SLEEP = "sleep"
     FAILED = "failed"
@@ -36,6 +39,13 @@ class Node:
     last_account_time: float = 0.0
     # degraded (straggler) multiplier on epoch times
     slowdown: float = 1.0
+    # DVFS state: relative accelerator frequency (1.0 = the calibrated
+    # full-clock operating point) and its ladder step; ``target_step`` is
+    # the scheduler-chosen step the power-cap enforcer may throttle below
+    # but never raises above (None = the ladder top)
+    freq: float = 1.0
+    freq_step: Optional[int] = None
+    target_step: Optional[int] = None
     # incrementally-maintained raw (uncapped) per-GPU composites
     util_raw: List[float] = dataclasses.field(default_factory=list, repr=False)
     mem_raw: List[float] = dataclasses.field(default_factory=list, repr=False)
@@ -70,24 +80,53 @@ class Node:
 
     def time_factor(self, profile: JobProfile) -> float:
         """Multiplier on reference epoch times for ``profile`` here:
-        straggler slowdown x 1/SKU speed."""
-        return self.slowdown / self.job_speed(profile)
+        straggler slowdown x 1/SKU speed x the DVFS slowdown of the node's
+        current frequency step."""
+        return self.time_factor_at(profile)
+
+    def time_factor_at(self, profile: JobProfile, freq: Optional[float] = None) -> float:
+        """``time_factor`` evaluated at a hypothetical relative frequency
+        ``freq`` (None = the node's current frequency) — what a
+        frequency-aware scheduler scores candidate steps with."""
+        f = self.freq if freq is None else freq
+        base = self.slowdown / self.job_speed(profile)
+        if f >= 1.0:
+            return base
+        return base * dvfs.time_multiplier(f, profile.gpu_util)
 
     def power_model(self, default: PowerModel) -> PowerModel:
+        """This node's calibrated power model (its SKU's, else ``default``
+        — the simulator-wide reference model)."""
         return self.sku.power if self.sku else default
+
+    def current_power_w(self, jobs: Dict[int, Job], default: PowerModel) -> float:
+        """Instantaneous draw (W) in the node's present state: sleep/idle
+        housekeeping, zero when failed, else the frequency-adjusted
+        ``P(U, f)`` of its residents' combined utilization."""
+        pm = self.power_model(default)
+        if self.state == NodeState.SLEEP:
+            return pm.sleep_w
+        if self.state == NodeState.FAILED:
+            return 0.0
+        if not self._resident_count:
+            return pm.idle_w
+        return pm.node_power_at(self.node_util(jobs), self.freq)
 
     # -- residency ---------------------------------------------------------
 
     def resident_job_ids(self) -> Set[int]:
+        """Ids of every job holding at least one GPU here."""
         return set(self._resident_count)
 
     def residents_on(self, gpu_ids: Sequence[int]) -> Set[int]:
+        """Ids of jobs resident on any of ``gpu_ids``."""
         out: Set[int] = set()
         for g in gpu_ids:
             out |= self.gpu_residents[g]
         return out
 
     def add_job(self, job: Job, gpu_ids: Sequence[int]) -> None:
+        """Place ``job`` on ``gpu_ids``, updating the composites in O(k)."""
         p = job.profile
         for g in gpu_ids:
             self.gpu_residents[g].add(job.id)
@@ -97,6 +136,7 @@ class Node:
         self._resident_count[job.id] = len(tuple(gpu_ids))
 
     def remove_job(self, job: Job) -> None:
+        """Remove ``job`` from every GPU it holds (no-op if absent)."""
         p = job.profile
         for g, residents in enumerate(self.gpu_residents):
             if job.id in residents:
@@ -109,34 +149,34 @@ class Node:
         self._resident_count.pop(job.id, None)
 
     def is_idle(self) -> bool:
+        """True when no job holds any GPU here."""
         return not self._resident_count
 
     # -- utilization / power -------------------------------------------------
 
     def gpu_util(self, jobs: Dict[int, Job], gpu: int) -> float:
+        """Combined duty-cycle utilization of one GPU, percent (capped)."""
         return min(100.0, self.util_raw[gpu])
 
     def gpu_mem_util(self, jobs: Dict[int, Job], gpu: int, peak: bool = True) -> float:
+        """Combined (peak by default) memory utilization of one GPU."""
         return min(100.0, self.peak_raw[gpu] if peak else self.mem_raw[gpu])
 
     def node_util(self, jobs: Dict[int, Job]) -> float:
+        """Mean per-GPU utilization across the node, percent."""
         if self.n_gpus == 0:
             return 0.0
         return sum(min(100.0, u) for u in self.util_raw) / self.n_gpus
 
     def account_energy(self, now: float, jobs: Dict[int, Job], power: PowerModel):
+        """Settle energy up to ``now`` at the draw implied by the current
+        state/utilization/frequency, attributing per-job shares by compute
+        demand.  Called before every state change, so each interval accrues
+        at the power that actually held over it."""
         dt = now - self.last_account_time
         if dt > 0:
-            pm = self.power_model(power)
             residents = self._resident_count
-            if self.state == NodeState.SLEEP:
-                p = pm.sleep_w
-            elif self.state == NodeState.FAILED:
-                p = 0.0
-            elif not residents:
-                p = pm.idle_w
-            else:
-                p = pm.node_power(self.node_util(jobs))
+            p = self.current_power_w(jobs, power)
             kwh = p * dt / 1000.0
             self.energy_kwh += kwh
             if residents and self.state == NodeState.ON:

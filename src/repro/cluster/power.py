@@ -23,6 +23,12 @@ import numpy as np
 
 from repro.roofline import hw
 
+# DVFS power-law exponent: dynamic draw scales ~ f^gamma with the relative
+# core frequency (cubic in the ideal V~f regime; 2.7 matches the slightly
+# sub-cubic exponents measured on real GPUs, where voltage cannot track
+# frequency all the way down the ladder)
+DVFS_GAMMA = 2.7
+
 # --- paper calibration data (Tables 1-4) -----------------------------------
 
 # job profiles measured on an exclusive 8xV100 node
@@ -76,10 +82,27 @@ class PowerModel:
     max_util: float = 100.0
 
     def node_power(self, gpu_util: float) -> float:
+        """Node draw (W) at ``gpu_util`` percent, full clock."""
         u = min(max(gpu_util, 0.0), self.max_util)
         return self.a + self.b * u + self.c * u * u
 
+    def node_power_at(self, gpu_util: float, freq: float = 1.0) -> float:
+        """Node draw (W) at ``gpu_util`` percent with the accelerators
+        clocked at relative frequency ``freq`` (top step == 1.0).
+
+        The DVFS law: the *dynamic* component (draw above idle) scales with
+        ``freq ** DVFS_GAMMA`` while the static/housekeeping component does
+        not.  At ``freq >= 1.0`` this returns ``node_power`` bit-for-bit —
+        the calibration invariant every frequency-unaware simulation relies
+        on."""
+        base = self.node_power(gpu_util)
+        if freq >= 1.0:
+            return base
+        dynamic = max(base - self.idle_w, 0.0)
+        return self.idle_w + dynamic * freq**DVFS_GAMMA
+
     def energy_kwh(self, gpu_util: float, hours: float) -> float:
+        """Energy (kWh) of ``hours`` at ``gpu_util`` percent, full clock."""
         return self.node_power(gpu_util) * hours / 1000.0
 
 
@@ -144,6 +167,7 @@ def sku_registry() -> Dict[str, GPUSku]:
 
 
 def get_sku(name: str) -> GPUSku:
+    """Registered ``GPUSku`` for ``name`` (KeyError names the known set)."""
     try:
         return sku_registry()[name]
     except KeyError:
@@ -188,8 +212,10 @@ def tpu_v5e_power_model(chips_per_node: int = hw.CHIPS_PER_HOST) -> PowerModel:
 
 
 def paper_energy_single(job: str) -> float:
+    """Measured exclusive-run energy (kWh) of a paper job (Table 1)."""
     return PAPER_SINGLE[job][1]
 
 
 def paper_energy_colocated(jobs: Tuple[str, ...]) -> float:
+    """Measured co-located energy (kWh) of a paper set (Table 3)."""
     return PAPER_COLOCATED[tuple(sorted(jobs))][1]

@@ -21,7 +21,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.cluster import colocation
+from repro.cluster import colocation, dvfs
 from repro.cluster.job import Job, JobProfile, JobState
 from repro.cluster.jobqueue import OrderedQueue
 from repro.cluster.node import Node, NodeState
@@ -59,9 +59,19 @@ class SimConfig:
     # ``power.fleet_skus`` for mix helpers).  None = homogeneous reference
     # fleet (the simulator-level ``power`` model, V100 by default).
     node_skus: Optional[Tuple[str, ...]] = None
+    # cluster-wide instantaneous power cap (W); 0 = uncapped.  When set, a
+    # ``dvfs.PowerCapEnforcer`` runs after every allocation-changing event:
+    # it steps node frequencies down (least-SLO-risk residents first) until
+    # the fleet draw fits, and back up when headroom returns.
+    power_cap_w: float = 0.0
 
 
 class Simulator:
+    """The discrete-event cluster simulator (see the module docstring for
+    the event model).  Schedulers mutate state only through ``allocate`` /
+    ``deallocate`` / ``resize`` / ``set_frequency``; everything else —
+    energy settlement, progress re-rating, cap enforcement — follows."""
+
     def __init__(
         self,
         cfg: SimConfig,
@@ -119,10 +129,19 @@ class Simulator:
         # resize scored against the old placement can never fire
         self._resize_ver: Dict[int, int] = {}
         self.resize_skipped: int = 0  # requests that were stale at fire time
+        # DVFS / power-cap bookkeeping: fleet draw is re-sampled (and the
+        # cap enforced) only after events that can change it
+        self._power_dirty = True
+        self.peak_fleet_power_w = 0.0
+        self.freq_change_count = 0
+        self.power_cap = (
+            dvfs.PowerCapEnforcer(cfg.power_cap_w) if cfg.power_cap_w > 0 else None
+        )
 
     # ------------------------------------------------------------------ util
 
     def push(self, time: float, kind: str, payload: Any = None) -> None:
+        """Enqueue an event (dispatched to ``_ev_<kind>`` at ``time``)."""
         self._seq += 1
         heapq.heappush(self._heap, _Event(time, self._seq, kind, payload))
 
@@ -212,6 +231,9 @@ class Simulator:
         )
 
     def allocate(self, job: Job, node_id: int, gpu_ids: Sequence[int]) -> None:
+        """Place ``job`` on ``gpu_ids`` of ``node_id`` now: wakes a sleeping
+        node, settles its energy, starts/updates progress bookkeeping and
+        re-rates every resident for the new co-location."""
         node = self.nodes[node_id]
         self._account_node(node)
         if node.state == NodeState.SLEEP:
@@ -226,6 +248,7 @@ class Simulator:
             self.queue.remove(job.id)
         self._last_progress_t[job.id] = self.now
         self._rerate(node)
+        self._power_dirty = True
 
     def deallocate(self, job: Job, to_queue: bool = True, checkpoint: bool = True) -> None:
         """Remove a job from its node (EaCO undo / failure / completion).
@@ -256,6 +279,7 @@ class Simulator:
             self.queue.insert(0, job.id)
         self._rerate(node)
         self._dirty = True
+        self._power_dirty = True
         self.scheduler.on_node_freed(self, node)
 
     # ------------------------------------------------------------- resizing
@@ -432,18 +456,63 @@ class Simulator:
         node.account_energy(self.now, self.jobs, self.power)
 
     def account_all(self) -> None:
+        """Settle every node's energy up to ``now`` (end-of-run flush)."""
         for n in self.nodes:
             self._account_node(n)
+
+    # ----------------------------------------------------------- DVFS / cap
+
+    def fleet_power_w(self) -> float:
+        """Instantaneous cluster draw (W) across all nodes, at their
+        current states, utilizations and frequency steps."""
+        return sum(n.current_power_w(self.jobs, self.power) for n in self.nodes)
+
+    def set_frequency(self, node_id: int, step: int) -> None:
+        """Clock ``node_id`` to ladder ``step`` immediately (scheduler
+        action): energy is settled at the old frequency up to ``now``,
+        every resident is re-rated at the new one, and the step becomes the
+        node's ``target_step`` — the level the power-cap enforcer may
+        throttle below but never raise above.  Also available as a pushed
+        ``"set_frequency"`` event (payload ``{"node": id, "step": k}``)."""
+        node = self.nodes[node_id]
+        dvfs.node_ladder(node).freq(step)  # validate before mutating
+        node.target_step = step
+        self._apply_freq_step(node, step)
+
+    def _apply_freq_step(self, node: Node, step: int) -> None:
+        """Move ``node`` to ladder ``step`` without touching its target
+        (the enforcer's entry point).  Settles energy first so the interval
+        behind ``now`` accrues at the frequency that actually held."""
+        freq = dvfs.node_ladder(node).freq(step)
+        if node.freq_step == step or (node.freq_step is None and freq == node.freq):
+            node.freq_step = step
+            return
+        self._account_node(node)
+        node.freq = freq
+        node.freq_step = step
+        self.freq_change_count += 1
+        self._rerate(node)
+        self._dirty = True  # headroom moved: the scheduler may act on it
+        self._power_dirty = True
+
+    def _ev_set_frequency(self, payload):
+        self.set_frequency(payload["node"], payload["step"])
 
     # ---------------------------------------------------------------- events
 
     def add_job(self, profile: JobProfile, arrival: float, deadline: float) -> Job:
+        """Register a job and schedule its arrival event; returns it."""
         job = Job(id=len(self.jobs), profile=profile, arrival=arrival, deadline=deadline)
         self.jobs[job.id] = job
         self.push(arrival, "arrival", {"job": job.id})
         return job
 
     def run(self, until: Optional[float] = None) -> None:
+        """Drain events (up to ``until``, exclusive of later events) — the
+        main loop: dispatch, re-schedule when allocation state moved,
+        enforce the power cap / refresh the fleet-power peak when draw
+        moved, stop early once every job is done.  Re-entrant: a paused
+        run resumes exactly where it stopped."""
         if not self._started:
             # arm once: resuming a paused run must not re-schedule failures
             # or stack duplicate sample chains
@@ -476,6 +545,16 @@ class Simulator:
             if self._dirty:
                 self._dirty = False
                 self.scheduler.try_schedule(self)
+            # fleet power only moves on allocation / state / frequency
+            # changes: enforce the cap and refresh the peak exactly then,
+            # still within the same event timestamp
+            if self._power_dirty:
+                if self.power_cap is not None:
+                    self.power_cap.enforce(self)
+                self._power_dirty = False
+                p = self.fleet_power_w()
+                if p > self.peak_fleet_power_w:
+                    self.peak_fleet_power_w = p
             if self._done_count == len(self.jobs):
                 break
         self.account_all()
@@ -525,6 +604,7 @@ class Simulator:
             self.deadline_violations += 1
         job.node_id = None
         self._rerate(node)
+        self._power_dirty = True
         self.scheduler.on_complete(self, job)
         self.scheduler.on_node_freed(self, node)
 
@@ -545,6 +625,7 @@ class Simulator:
             self.deallocate(job, to_queue=True, checkpoint=True)
             job.restart_count += 1
         node.state = NodeState.FAILED
+        self._power_dirty = True
         self.push(self.now + self.cfg.node_repair_hours, "repair", {"node": node.id})
 
     def _ev_repair(self, payload):
@@ -552,6 +633,7 @@ class Simulator:
         self._account_node(node)
         node.state = NodeState.ON
         self._dirty = True
+        self._power_dirty = True
         node.slowdown = (
             self.cfg.straggler_factor
             if self.rng.random() < self.cfg.straggler_prob
@@ -569,6 +651,9 @@ class Simulator:
     # ---------------------------------------------------------------- results
 
     def results(self) -> Dict[str, Any]:
+        """Headline metrics of the replay so far (energy, JCT/JTT/wait,
+        makespan, violations, undo/restart/resize counters, peak fleet
+        power and DVFS/cap activity)."""
         # completion stats come from O(1) accumulators maintained at
         # completion time; the single remaining pass over the job table only
         # folds static per-job counters (schedulers bump them in place) and
@@ -597,4 +682,12 @@ class Simulator:
             "restart_count": restart,
             "resize_count": resize,
             "job_energy_kwh": job_e,
+            "peak_fleet_power_w": self.peak_fleet_power_w,
+            "power_cap_w": self.cfg.power_cap_w,
+            "freq_change_count": self.freq_change_count,
+            "cap_throttle_count": self.power_cap.throttle_count if self.power_cap else 0,
+            "cap_raise_count": self.power_cap.raise_count if self.power_cap else 0,
+            "cap_infeasible_events": (
+                self.power_cap.infeasible_events if self.power_cap else 0
+            ),
         }

@@ -157,6 +157,7 @@ def generate_trace(cfg: TraceConfig) -> List[Tuple[JobProfile, float, float]]:
 
 
 def load_into(sim, trace: Sequence[Tuple[JobProfile, float, float]]) -> None:
+    """Submit every trace entry to ``sim`` as an arrival event."""
     for prof, arrival, deadline in trace:
         sim.add_job(prof, arrival, deadline)
 

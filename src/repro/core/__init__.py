@@ -1,3 +1,5 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's primary contribution, as pluggable schedulers: EaCO
+(Algorithm 1/2) and its variants (EaCO-Occ, EaCO-Elastic, EaCO-PowerCap),
+the three paper baselines, and the shared admission machinery
+(FindCandidates, PredictJCT, the measurement history H).  See
+``docs/schedulers.md`` for the policy-by-policy map."""

@@ -61,6 +61,7 @@ class FIFO(_Base):
     name = "fifo"
 
     def try_schedule(self, sim) -> None:
+        """Allocate the head job to a free node, or block on it."""
         while sim.queue:
             job = sim.jobs[sim.queue[0]]
             node = self._free_node(sim, job)
@@ -77,6 +78,8 @@ class FIFOPacked(_Base):
     mem_threshold = 90.0
 
     def try_schedule(self, sim) -> None:
+        """FIFO with packing: free node first, else the least-loaded
+        memory-feasible node (fastest SKU on ties)."""
         progressed = True
         while progressed and sim.queue:
             progressed = False
@@ -119,6 +122,8 @@ class Gandiva(_Base):
         self._packed: Dict[int, float] = {}  # job id -> rate when packed
 
     def try_schedule(self, sim) -> None:
+        """Exclusive first; under contention pack two jobs by lowest
+        combined utilization (fastest SKU on ties)."""
         # single forward pass: packing only consumes capacity, so a job
         # that failed earlier in the pass cannot succeed on a re-scan
         for jid in list(sim.queue):
@@ -150,6 +155,8 @@ class Gandiva(_Base):
                 self._packed[job.id] = 0.0
 
     def on_epoch(self, sim, job: Job) -> None:
+        """Introspection: un-pack a job whose measured progress rate
+        degraded below ``unpack_rate_threshold`` of exclusive."""
         # introspection: un-pack a job whose measured progress rate degraded
         if job.id not in self._packed or job.node_id is None:
             return

@@ -20,12 +20,15 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.cluster import dvfs
 from repro.cluster.job import Job
 from repro.cluster.node import Node, NodeState
 
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
+    """One placeable GPU set for a queued job (Algorithm 2's output)."""
+
     node_id: int
     gpu_ids: Tuple[int, ...]
     utilization: float  # mean GPU utilization of the set (pre-allocation)
@@ -33,10 +36,14 @@ class Candidate:
     # SKU terms (reference-node values when the fleet is homogeneous):
     # heterogeneity-aware rankers trade these against utilization
     speed: float = 1.0  # job-specific throughput multiplier on this node
-    perf_per_watt: float = 1.0  # node perf per kW at full duty cycle
+    perf_per_watt: float = 1.0  # node perf per kW at its current frequency
+    # the node's current relative DVFS frequency (1.0 = full clock);
+    # ``speed`` and ``perf_per_watt`` already fold its slowdown in
+    freq: float = 1.0
 
     @property
     def degree(self) -> int:
+        """Number of jobs already resident on the candidate GPUs."""
         return len(self.resident_ids)
 
 
@@ -52,6 +59,9 @@ def find_candidates(
     sim, job: Job, thresholds: Thresholds, allow_sleeping: bool = True,
     width: Optional[int] = None,
 ) -> List[Candidate]:
+    """Algorithm 2: the hottest-k and coldest-k eligible GPU sets per node
+    meeting the utilization/memory thresholds for ``job`` (at ``width``
+    GPUs when given, else the profile's reference width)."""
     out: List[Candidate] = []
     seen = set()  # (node_id, gpu_ids) — dedup without O(|out|) scans
     k = width or job.profile.n_gpus
@@ -64,7 +74,12 @@ def find_candidates(
         if k > node.n_gpus:
             continue
         speed = node.job_speed(job.profile)
-        ppw = speed / (node.power_model(sim.power).node_power(100.0) / 1000.0)
+        if node.freq < 1.0:
+            # a frequency-capped node is slower for this job (sublinearly,
+            # by its compute-boundedness) and cheaper per unit time
+            speed = speed * dvfs.throughput_factor(node.freq, job.profile.gpu_util)
+        pm = node.power_model(sim.power)
+        ppw = speed / (pm.node_power_at(100.0, node.freq) / 1000.0)
         if node.is_idle():
             # fast path for the common empty node: every GPU is eligible at
             # zero load, so hot == cold == the first k GPUs
@@ -72,7 +87,7 @@ def find_candidates(
                 out.append(
                     Candidate(
                         node.id, tuple(range(k)), 0.0, (),
-                        speed=speed, perf_per_watt=ppw,
+                        speed=speed, perf_per_watt=ppw, freq=node.freq,
                     )
                 )
             continue
@@ -110,7 +125,7 @@ def find_candidates(
             out.append(
                 Candidate(
                     node.id, gpu_ids, util, residents,
-                    speed=speed, perf_per_watt=ppw,
+                    speed=speed, perf_per_watt=ppw, freq=node.freq,
                 )
             )
     return out

@@ -73,7 +73,13 @@ class EaCO:
         fleet the same packing decision is cheaper in joules there."""
         return sorted(candidates, key=lambda c: (-c.utilization, -c.perf_per_watt))
 
-    def _admit(self, sim, job: Job, cand: Candidate, width: Optional[int] = None) -> bool:
+    def _admit(
+        self, sim, job: Job, cand: Candidate, width: Optional[int] = None,
+        freq: Optional[float] = None,
+    ) -> bool:
+        """Eq. (2) gate for placing ``job`` on ``cand``: every co-located
+        deadline must hold (optionally evaluated at relative frequency
+        ``freq`` instead of the node's current step)."""
         residents = [sim.jobs[i] for i in cand.resident_ids]
         node = sim.nodes[cand.node_id]
         # width map: residents run at their allocated widths (== reference
@@ -82,8 +88,24 @@ class EaCO:
         if width:
             widths[job.id] = width
         return self.predictor.deadlines_met(
-            sim.now, [job, *residents], node, widths=widths or None
+            sim.now, [job, *residents], node, widths=widths or None, freq=freq
         )
+
+    def _choose(
+        self, sim, job: Job, ranked: List[Candidate], width: Optional[int]
+    ) -> Optional[Candidate]:
+        """Pick the candidate to place ``job`` on (Alg. 1's inner loop):
+        the first ranked set whose co-location keeps every deadline.
+        Subclasses override this to optimize jointly over more knobs (e.g.
+        ``EaCOPowerCap`` adds the frequency step)."""
+        for cand in ranked:
+            if self._admit(sim, job, cand, width):
+                return cand
+        return None
+
+    def _on_placed(self, sim, job: Job, cand: Candidate) -> None:
+        """Hook invoked right after ``job`` lands on ``cand`` (no-op here;
+        ``EaCOPowerCap`` applies its chosen frequency step)."""
 
     def schedule_job(self, sim, job: Job, width: Optional[int] = None) -> bool:
         """One pass of Alg. 1's nested loops for job j. True if allocated."""
@@ -93,27 +115,26 @@ class EaCO:
             for c in find_candidates(sim, job, self.thresholds, width=width)
             if (c.node_id, c.gpu_ids) not in failed
         ]
-        for cand in self._rank(cands):
-            if not self._admit(sim, job, cand, width):
-                continue
-            node = sim.nodes[cand.node_id]
-            sim.allocate(job, cand.node_id, cand.gpu_ids)
-            if cand.resident_ids:
-                # tentative: observe one epoch of every co-located job
-                job.state = JobState.OBSERVING
-                self._drop_obs(job.id)  # stale window from a torn-down placement
-                self._obs[job.id] = _Observation(
-                    node_id=cand.node_id,
-                    gpu_ids=cand.gpu_ids,
-                    epochs_at_alloc={
-                        i: sim.jobs[i].checkpointed_epochs
-                        for i in (*cand.resident_ids, job.id)
-                    },
-                    failed_sets=failed,
-                )
-                self._obs_by_node.setdefault(cand.node_id, set()).add(job.id)
-            return True
-        return False
+        cand = self._choose(sim, job, self._rank(cands), width)
+        if cand is None:
+            return False
+        sim.allocate(job, cand.node_id, cand.gpu_ids)
+        if cand.resident_ids:
+            # tentative: observe one epoch of every co-located job
+            job.state = JobState.OBSERVING
+            self._drop_obs(job.id)  # stale window from a torn-down placement
+            self._obs[job.id] = _Observation(
+                node_id=cand.node_id,
+                gpu_ids=cand.gpu_ids,
+                epochs_at_alloc={
+                    i: sim.jobs[i].checkpointed_epochs
+                    for i in (*cand.resident_ids, job.id)
+                },
+                failed_sets=failed,
+            )
+            self._obs_by_node.setdefault(cand.node_id, set()).add(job.id)
+        self._on_placed(sim, job, cand)
+        return True
 
     def _drop_obs(self, jid: int) -> None:
         obs = self._obs.pop(jid, None)
@@ -127,9 +148,10 @@ class EaCO:
     # ------------------------------------------------------------ sim hooks
 
     def on_arrival(self, sim, job: Job) -> None:
-        pass  # try_schedule drains the queue after every event
+        """No-op: try_schedule drains the queue after every event."""
 
     def try_schedule(self, sim) -> None:
+        """Drain the wait queue (one forward pass) and sleep empty nodes."""
         # Single forward pass: allocation only ever consumes capacity and
         # inflates residents, so a job that failed earlier in the pass
         # cannot succeed later in it — the old restart-on-progress loop
@@ -145,6 +167,7 @@ class EaCO:
         self._sleep_idle(sim)
 
     def on_epoch(self, sim, job: Job) -> None:
+        """Advance every observation window involving ``job``'s node."""
         # check every observation window that involves job's node
         observing = self._obs_by_node.get(job.node_id)
         if not observing:
@@ -200,11 +223,12 @@ class EaCO:
             sim.deallocate(job, to_queue=True, checkpoint=True)
 
     def on_complete(self, sim, job: Job) -> None:
+        """Forget the finished job's observation/exclusion bookkeeping."""
         self._drop_obs(job.id)
         self._failed.pop(job.id, None)
 
     def on_node_freed(self, sim, node: Node) -> None:
-        pass  # sleep handled in try_schedule
+        """No-op: the sleep pass runs at the end of try_schedule."""
 
     def _sleep_idle(self, sim) -> None:
         if not self.sleeps_idle_nodes:

@@ -35,6 +35,8 @@ from repro.elastic.controller import ElasticController
 
 
 class EaCOElastic(EaCO):
+    """EaCO + the elastic width levers (see the module docstring)."""
+
     name = "eaco-elastic"
 
     def __init__(
@@ -62,6 +64,7 @@ class EaCOElastic(EaCO):
     # ----------------------------------------------------------- scheduling
 
     def on_arrival(self, sim, job: Job) -> None:
+        """Arm the narrow-admission patience wake-up for elastic jobs."""
         super().on_arrival(sim, job)
         if job.profile.is_elastic:
             # wake the scheduler when the narrow-admission patience window
@@ -90,6 +93,7 @@ class EaCOElastic(EaCO):
                     break
 
     def try_schedule(self, sim) -> None:
+        """EaCO pass, then narrow admission, then one Brain plan round."""
         super().try_schedule(sim)  # EaCO pass at reference width (+ sleep)
         self._try_narrow_admission(sim)
         self.controller.step(sim)  # Brain: grow / shrink / migrate plans

@@ -20,6 +20,10 @@ Signature = Tuple[str, ...]
 
 
 class History:
+    """The measurement history H: co-location signature -> measured
+    epoch-time inflation, seeded from the paper's Table 3 sets and grown
+    online by EaCO's observation phase (plus bridge calibrations)."""
+
     def __init__(self, seed_with_paper: bool = True):
         self._data: Dict[Signature, float] = {}
         self.hits = 0
@@ -31,6 +35,8 @@ class History:
                     self._data[tuple(sorted(sig))] = measured
 
     def get(self, signature: Iterable[str]) -> Optional[float]:
+        """Measured inflation for ``signature`` (None = miss; 1.0 for
+        singleton sets); updates the hit/miss counters."""
         key = tuple(sorted(signature))
         if len(key) <= 1:
             return 1.0
@@ -42,6 +48,7 @@ class History:
         return val
 
     def record(self, signature: Iterable[str], inflation: float) -> None:
+        """Store an observed inflation (overwrites: measurements win)."""
         key = tuple(sorted(signature))
         if len(key) > 1:
             self._data[key] = inflation
@@ -69,6 +76,7 @@ class History:
         return h
 
     def signatures(self) -> Dict[Signature, float]:
+        """Copy of the signature -> inflation table."""
         return dict(self._data)
 
     def __len__(self) -> int:
@@ -77,12 +85,15 @@ class History:
     # -- persistence ---------------------------------------------------------
 
     def save(self, path: str) -> None:
+        """Persist the table as JSON (signatures joined with ``|``)."""
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(path, "w") as f:
             json.dump({"|".join(k): v for k, v in self._data.items()}, f, indent=1)
 
     @classmethod
     def load(cls, path: str) -> "History":
+        """Paper-seeded History plus the entries stored at ``path`` (which
+        may be absent: persistence is best-effort)."""
         h = cls(seed_with_paper=True)
         if os.path.exists(path):
             with open(path) as f:

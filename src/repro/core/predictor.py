@@ -22,10 +22,15 @@ from repro.elastic import scaling
 
 
 class JCTPredictor:
+    """PredictJCT: estimates co-located finish times through the trust
+    chain in the module docstring, width- and frequency-aware."""
+
     def __init__(self, history: History):
         self.history = history
 
     def predict_inflation(self, profiles: Sequence[JobProfile]) -> float:
+        """Epoch-time inflation estimate for a co-located set: history ->
+        calibrated table -> analytic model."""
         if len(profiles) <= 1:
             return 1.0
         sig = colocation.set_signature(profiles)
@@ -55,15 +60,19 @@ class JCTPredictor:
     def deadlines_met(
         self, now: float, jobs: Sequence[Job], node=None,
         widths: Optional[Dict[int, int]] = None,
+        freq: Optional[float] = None,
     ) -> bool:
         """Eq. (2): every co-located job must meet its deadline.
 
         ``node``: the target node — per-job time factors come from its
-        straggler slowdown and SKU speed (None = reference node).  A job
-        whose deadline is unmeetable even under exclusive allocation on the
-        reference node (it aged out while queued) is admitted best-effort —
-        otherwise it would starve forever; its violation is still counted
-        by the sim.
+        straggler slowdown and SKU speed (None = reference node).
+        ``freq``: evaluate at a hypothetical relative frequency step
+        instead of the node's current one (how ``EaCOPowerCap`` scores
+        ladder steps; the DVFS slowdown applies to every co-located job,
+        since frequency is a node-level knob).  A job whose deadline is
+        unmeetable even under exclusive allocation on the reference node
+        (it aged out while queued) is admitted best-effort — otherwise it
+        would starve forever; its violation is still counted by the sim.
         """
         profiles = [j.profile for j in jobs]
         for j in jobs:
@@ -71,7 +80,7 @@ class JCTPredictor:
             if exclusive_finish > j.deadline:
                 continue  # hopeless SLO: best-effort, don't block placement
             w = widths.get(j.id) if widths else None
-            tf = node.time_factor(j.profile) if node is not None else 1.0
+            tf = node.time_factor_at(j.profile, freq) if node is not None else 1.0
             if self.predict_finish(now, j, profiles, tf, w) > j.deadline:
                 return False
         return True

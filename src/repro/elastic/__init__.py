@@ -1,6 +1,7 @@
-# Elastic GPU scaling subsystem: resize-aware throughput model (scaling),
-# energy-driven plan optimizer (brain), and the resize-plan applier
-# (controller).  The EaCOElastic scheduler in repro.core drives all three.
+"""Elastic GPU scaling subsystem: resize-aware throughput model
+(``scaling``), energy-driven plan optimizer (``brain``), and the
+resize-plan applier (``controller``).  The ``EaCOElastic`` scheduler in
+``repro.core`` drives all three."""
 
 from repro.elastic.scaling import (  # noqa: F401
     efficiency,

@@ -76,6 +76,9 @@ class BrainConfig:
 
 
 class Brain:
+    """The resize-plan optimizer (see the module docstring for the plan
+    kinds and scoring model).  Proposes; never mutates the simulator."""
+
     def __init__(self, predictor: JCTPredictor, cfg: Optional[BrainConfig] = None):
         self.predictor = predictor
         self.cfg = cfg or BrainConfig()
@@ -83,12 +86,12 @@ class Brain:
     # ------------------------------------------------------------- helpers
 
     def _power(self, sim, node: Node, util: float) -> float:
-        """``node``'s draw at ``util`` under its own SKU power model; an
-        empty node sleeps (or idles) instead."""
+        """``node``'s draw at ``util`` under its own SKU power model and
+        current DVFS step; an empty node sleeps (or idles) instead."""
         pm = node.power_model(sim.power)
         if util <= 1e-9:
             return pm.sleep_w if self.cfg.sleeps_idle_nodes else pm.idle_w
-        return pm.node_power(min(util, 100.0))
+        return pm.node_power_at(min(util, 100.0), node.freq)
 
     @staticmethod
     def _node_util(sim, node: Node, exclude: Optional[int] = None) -> float:
@@ -290,6 +293,8 @@ class Brain:
         return out
 
     def propose(self, sim) -> List[Plan]:
+        """One proposal round: the best grow/migrate/shrink plan per
+        resident job, deadline-checked, ranked by predicted saving."""
         cfg = self.cfg
         plans: List[Plan] = []
         queue_depth = len(sim.queue)

@@ -26,6 +26,9 @@ class ControllerStats:
 
 
 class ElasticController:
+    """Applies Brain plans through ``Simulator.request_resize`` (the only
+    mutation path), keeping issue/reject accounting per plan kind."""
+
     def __init__(self, brain: Brain, max_actions_per_step: int = 2):
         self.brain = brain
         self.max_actions_per_step = max_actions_per_step

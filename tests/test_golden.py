@@ -34,6 +34,7 @@ from repro.cluster.trace import TraceConfig, generate_trace, load_into
 from repro.core.baselines import FIFO, FIFOPacked, Gandiva
 from repro.core.eaco import EaCO
 from repro.core.eaco_elastic import EaCOElastic
+from repro.core.eaco_powercap import EaCOPowerCap
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_metrics.json")
 
@@ -52,6 +53,10 @@ SCHEDULERS = {
     "eaco": EaCO,
     "eaco-elastic": EaCOElastic,
 }
+
+# EaCO-PowerCap replays the same trace under a cluster power cap: ~80% of
+# the uncapped EaCO run's observed peak fleet draw (48657 W) on this trace
+POWERCAP_W = 38_900.0
 
 # locked metric -> relative (float) or absolute (int) tolerance
 TOLERANCES = {
@@ -127,6 +132,24 @@ def test_golden_family_metrics(name):
     )
 
 
+def _run_powercap():
+    """EaCO-PowerCap on the paper trace under the 80% cluster power cap
+    (the DVFS tentpole's golden): also locks that the cap held."""
+    sim = Simulator(
+        SimConfig(power_cap_w=POWERCAP_W, **SIM), EaCOPowerCap()
+    )
+    load_into(sim, generate_trace(TRACE))
+    sim.run(until=100_000)
+    r = sim.results()
+    assert r["peak_fleet_power_w"] <= POWERCAP_W + 1e-6
+    return {k: r[k] for k in TOLERANCES}
+
+
+def test_golden_powercap_metrics():
+    """The power-capped EaCO-PowerCap replay is locked too."""
+    _check(_load_golden()["eaco_powercap"], _run_powercap(), "eaco_powercap")
+
+
 def _regen():
     payload = {
         "trace": {"n_jobs": TRACE.n_jobs, "seed": TRACE.seed,
@@ -139,6 +162,8 @@ def _regen():
         "family_schedulers": {
             name: _run_family(name) for name in sorted(SCHEDULERS)
         },
+        "powercap_w": POWERCAP_W,
+        "eaco_powercap": _run_powercap(),
     }
     with open(GOLDEN_PATH, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)

@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""Docs link checker (CI gate): every relative markdown link in README.md
+and docs/**.md must resolve to an existing file.  External http(s) links
+are not fetched.  Exits non-zero listing the broken links.
+
+    python tools/check_docs_links.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+
+
+def doc_files():
+    """README.md plus every markdown file under docs/."""
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    for root, _, files in os.walk(docs):
+        out += [os.path.join(root, f) for f in sorted(files) if f.endswith(".md")]
+    return out
+
+
+def broken_links(path: str):
+    """(target, resolved) pairs in ``path`` that point at nothing."""
+    with open(path) as f:
+        text = f.read()
+    out = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            out.append((target, resolved))
+    return out
+
+
+def main() -> int:
+    bad = 0
+    for path in doc_files():
+        rel = os.path.relpath(path, REPO)
+        for target, resolved in broken_links(path):
+            print(f"BROKEN {rel}: ({target}) -> {resolved}", file=sys.stderr)
+            bad += 1
+    if bad:
+        print(f"{bad} broken relative link(s)", file=sys.stderr)
+        return 1
+    print(f"docs links OK ({len(doc_files())} files checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
