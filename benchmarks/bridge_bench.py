@@ -26,7 +26,7 @@ import os
 import time
 from typing import Dict, List
 
-from benchmarks.common import Row, save_json
+from benchmarks.common import Row, bench_meta, save_json, write_bench
 from repro.bridge import build_calibration
 from repro.cluster import colocation
 from repro.cluster.simulator import SimConfig, Simulator
@@ -91,10 +91,15 @@ def run() -> List[Row]:
         "results": results,
     }
     save_json("bridge_bench.json", payload)
-    root = os.path.join(os.path.dirname(__file__), "..", "BENCH_bridge.json")
-    with open(os.path.abspath(root), "w") as f:
-        json.dump(payload, f, indent=1)
-        f.write("\n")
+    write_bench(
+        "bridge",
+        payload,
+        bench_meta(
+            trace,
+            fleet={"n_nodes": N_NODES},
+            calibration_version=cal.version,
+        ),
+    )
 
     c = results["eaco_calibrated"]
     p = results["eaco_precalibration"]

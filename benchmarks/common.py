@@ -2,12 +2,22 @@
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# bump when the shape of the BENCH_*.json payloads changes incompatibly
+BENCH_SCHEMA_VERSION = 1
+
+# the runner (benchmarks/run.py) exports a single wall-clock timestamp so
+# every BENCH file of one sweep carries the same stamp; direct module
+# invocation leaves it unset and the artifacts stay fully deterministic
+TIMESTAMP_ENV = "REPRO_BENCH_TIMESTAMP"
 
 
 def artifact_path(*parts: str) -> str:
@@ -45,6 +55,92 @@ def timed_us(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 
 def pct(new: float, ref: float) -> float:
     return (new / ref - 1.0) * 100.0
+
+
+def trace_signature(trace: Sequence[Tuple[Any, float, float]]) -> str:
+    """Deterministic content signature of a generated trace: sha256 over
+    every job's (family, reference width, arrival, deadline), truncated to
+    16 hex chars.  Two BENCH files with equal signatures replayed exactly
+    the same workload, whatever config produced it."""
+    h = hashlib.sha256()
+    for profile, arrival, deadline in trace:
+        h.update(
+            f"{profile.name}|{profile.n_gpus}|{arrival!r}|{deadline!r}\n".encode()
+        )
+    return h.hexdigest()[:16]
+
+
+def bench_meta(
+    trace: Optional[Sequence[Tuple[Any, float, float]]] = None,
+    fleet: Optional[Dict[str, Any]] = None,
+    **extra: Any,
+) -> Dict[str, Any]:
+    """The shared metadata block every BENCH_*.json carries: schema
+    version, trace signature + job count, fleet shape, and the sweep
+    timestamp when the runner exported one (absent on direct invocation,
+    keeping artifacts deterministic)."""
+    meta: Dict[str, Any] = {"schema_version": BENCH_SCHEMA_VERSION}
+    if trace is not None:
+        meta["trace_signature"] = trace_signature(trace)
+        meta["n_jobs"] = len(trace)
+    if fleet is not None:
+        meta["fleet"] = fleet
+    ts = os.environ.get(TIMESTAMP_ENV)
+    if ts:
+        meta["timestamp"] = ts
+    meta.update(extra)
+    return meta
+
+
+def write_bench(name: str, payload: Dict[str, Any], meta: Dict[str, Any]) -> str:
+    """Write the repo-root ``BENCH_<name>.json`` trajectory file with the
+    shared ``meta`` block stamped in; returns the path."""
+    out = {"meta": meta, **payload}
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+        f.write("\n")
+    return path
+
+
+# metric keys the --check regression gate compares (higher = worse)
+_REGRESSION_KEYS = ("total_energy_kwh", "energy_kwh", "avg_jct_h", "avg_jtt_h")
+
+
+def _walk_metrics(payload: Any, path: str = "") -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    if isinstance(payload, dict):
+        for k, v in payload.items():
+            p = f"{path}.{k}" if path else str(k)
+            if k in _REGRESSION_KEYS and isinstance(v, (int, float)):
+                out[p] = float(v)
+            else:
+                out.update(_walk_metrics(v, p))
+    return out
+
+
+def check_regression(
+    baseline: Dict[str, Any], current: Dict[str, Any], tolerance: float = 0.10
+) -> List[str]:
+    """Compare two BENCH payloads; returns human-readable failures for
+    every energy/JCT metric that regressed (grew) by more than
+    ``tolerance`` relative to the committed baseline.  Metrics present in
+    only one payload are ignored — adding a scheduler or cap level must
+    not fail the gate."""
+    old = _walk_metrics(baseline)
+    new = _walk_metrics(current)
+    failures = []
+    for key in sorted(old.keys() & new.keys()):
+        ref = old[key]
+        if ref <= 0:
+            continue
+        ratio = new[key] / ref
+        if ratio > 1.0 + tolerance:
+            failures.append(
+                f"{key}: {new[key]:.4g} vs baseline {ref:.4g} "
+                f"({(ratio - 1) * 100:+.1f}% > +{tolerance * 100:.0f}%)"
+            )
+    return failures
 
 
 class Row:

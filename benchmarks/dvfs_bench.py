@@ -15,12 +15,10 @@ and a peak fleet draw that never exceeds the cap at any event timestamp.
 
 from __future__ import annotations
 
-import json
-import os
 import time
 from typing import Dict, List
 
-from benchmarks.common import Row, save_json
+from benchmarks.common import Row, bench_meta, save_json, write_bench
 from repro.cluster.power import fleet_skus
 from repro.cluster.simulator import SimConfig, Simulator
 from repro.cluster.trace import ProductionTraceConfig, generate_production_trace, load_into
@@ -116,10 +114,16 @@ def run() -> List[Row]:
         },
     }
     save_json("dvfs_bench.json", payload)
-    root = os.path.join(os.path.dirname(__file__), "..", "BENCH_dvfs.json")
-    with open(os.path.abspath(root), "w") as f:
-        json.dump(payload, f, indent=1)
-        f.write("\n")
+    write_bench(
+        "dvfs",
+        payload,
+        bench_meta(
+            trace,
+            fleet={"n_nodes": N_NODES, "sku_mix": [list(m) for m in SKU_MIX]},
+            queue_window=QUEUE_WINDOW,
+            cap_fractions=list(CAP_FRACTIONS),
+        ),
+    )
 
     rows = []
     for key, r in capped.items():

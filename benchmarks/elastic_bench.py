@@ -14,7 +14,7 @@ import os
 import time
 from typing import Dict, List
 
-from benchmarks.common import Row, save_json
+from benchmarks.common import Row, bench_meta, save_json, write_bench
 from repro.cluster.simulator import SimConfig, Simulator
 from repro.cluster.trace import TraceConfig, generate_trace, load_into
 from repro.core.baselines import FIFO, FIFOPacked, Gandiva
@@ -78,9 +78,7 @@ def run() -> List[Row]:
         "cluster": SIM,
         "results": payload,
     }
-    root = os.path.join(os.path.dirname(__file__), "..", "BENCH_elastic.json")
-    with open(os.path.abspath(root), "w") as f:
-        json.dump(bench, f, indent=1)
+    write_bench("elastic", bench, bench_meta(trace, fleet=dict(SIM)))
 
     e = payload["eaco-elastic"]
     return [

@@ -10,14 +10,51 @@ Prints ``name,us_per_call,derived`` CSV rows:
   dvfs     — EaCO vs EaCO-PowerCap at 3 cluster power-cap levels (10k jobs)
   roofline — §Roofline terms per (arch x shape x mesh) from the dry-run
   kernels  — Pallas kernel micro-benches + interpret-mode correctness
+
+Flags:
+  ``--check`` — snapshot the committed repo-root ``BENCH_*.json`` files
+  before the sweep, re-compare after it, and exit non-zero if any shared
+  energy/JCT metric regressed by more than 10% against its committed
+  baseline (see ``common.check_regression``).
+
+The driver exports one wall-clock timestamp (``REPRO_BENCH_TIMESTAMP``)
+so every BENCH file of a sweep carries the same stamp; direct module
+invocation leaves the artifacts timestamp-free and deterministic.
 """
 
 from __future__ import annotations
 
+import datetime
+import glob
+import json
+import os
 import sys
+
+from benchmarks.common import REPO_ROOT, TIMESTAMP_ENV, check_regression
+
+REGRESSION_TOLERANCE = 0.10
+
+
+def _snapshot_benches() -> dict:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                out[os.path.basename(path)] = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+    return out
 
 
 def main() -> None:
+    check = "--check" in sys.argv[1:]
+    baselines = _snapshot_benches() if check else {}
+    os.environ.setdefault(
+        TIMESTAMP_ENV,
+        datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+    )
     print("name,us_per_call,derived")
     from benchmarks import (
         dvfs_bench, elastic_bench, fig1, fig3, fig4, kernels_bench,
@@ -44,6 +81,16 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},0.00,ERROR: {type(e).__name__}: {e}", flush=True)
+    if check:
+        for fn, base in sorted(baselines.items()):
+            fresh = _snapshot_benches().get(fn)
+            if fresh is None:
+                continue  # the sweep did not regenerate this file
+            for problem in check_regression(
+                base, fresh, tolerance=REGRESSION_TOLERANCE
+            ):
+                failures += 1
+                print(f"check,{0:.2f},REGRESSION {fn}: {problem}", flush=True)
     if failures:
         sys.exit(1)
 

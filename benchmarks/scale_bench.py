@@ -17,7 +17,7 @@ import os
 import time
 from typing import Dict, List
 
-from benchmarks.common import Row, save_json
+from benchmarks.common import Row, artifact_path, bench_meta, save_json, write_bench
 from repro.cluster.power import fleet_skus
 from repro.cluster.simulator import SimConfig, Simulator
 from repro.cluster.trace import (
@@ -41,8 +41,21 @@ TRACE = ProductionTraceConfig(
     duration_sigma_ln_h=1.4,  # minutes -> days tail
 )
 
+# telemetry mode (REPRO_TELEMETRY=1) replays the bridge-calibrated family
+# pool so the drift report exercises all 10 model families
+TRACE_OBS = ProductionTraceConfig(
+    n_jobs=N_JOBS,
+    seed=0,
+    arrival_rate_per_hour=40.0,
+    duration_mu_ln_h=-0.5,
+    duration_sigma_ln_h=1.4,
+    mix="bridge",
+)
+# acceptance bound: telemetry-on wall clock vs telemetry-off on the trace
+OVERHEAD_BOUND = 1.3
 
-def _run_one(scheduler, trace) -> Dict:
+
+def _run_one(scheduler, trace, hub=None) -> Dict:
     sim = Simulator(
         SimConfig(
             n_nodes=N_NODES,
@@ -50,6 +63,7 @@ def _run_one(scheduler, trace) -> Dict:
             node_skus=fleet_skus(N_NODES, SKU_MIX),
         ),
         scheduler,
+        hub=hub,
     )
     load_into(sim, trace)
     t0 = time.perf_counter()
@@ -69,6 +83,55 @@ def _run_one(scheduler, trace) -> Dict:
         "avg_active_nodes": round(r["avg_active_nodes"], 2),
         "deadline_violations": r["deadline_violations"],
         "undo_count": r["undo_count"],
+    }
+
+
+def _run_telemetry() -> Dict:
+    """Telemetry replay (REPRO_TELEMETRY=1): the same 10k-job scale on the
+    bridge family pool, telemetry off then on, exporting the Perfetto
+    trace / drift report / Prometheus snapshot to
+    ``benchmarks/artifacts/obs/`` and reporting the overhead ratio."""
+    from repro.obs import TelemetryHub, render_report, to_prometheus, write_perfetto
+
+    trace = generate_production_trace(TRACE_OBS)
+    off = _run_one(EaCO(queue_window=QUEUE_WINDOW), trace)
+    hub = TelemetryHub()
+    sim = Simulator(
+        SimConfig(
+            n_nodes=N_NODES, seed=0, node_skus=fleet_skus(N_NODES, SKU_MIX)
+        ),
+        EaCO(queue_window=QUEUE_WINDOW),
+        hub=hub,
+    )
+    load_into(sim, trace)
+    t0 = time.perf_counter()
+    sim.run(until=1_000_000)
+    wall_on = time.perf_counter() - t0
+    results = sim.results()
+
+    write_perfetto(hub, artifact_path("obs", "scale_trace.perfetto.json"), results)
+    drift = hub.drift_report()
+    with open(artifact_path("obs", "scale_drift_report.json"), "w") as f:
+        json.dump(drift, f, indent=1)
+    with open(artifact_path("obs", "scale_metrics.prom"), "w") as f:
+        f.write(to_prometheus(results, hub))
+    with open(artifact_path("obs", "scale_report.txt"), "w") as f:
+        f.write(render_report(results, hub, title="scale_bench telemetry replay"))
+
+    ratio = wall_on / off["wall_s"] if off["wall_s"] else 1.0
+    return {
+        "trace_mix": TRACE_OBS.mix,
+        "wall_s_off": off["wall_s"],
+        "wall_s_on": round(wall_on, 2),
+        "overhead_ratio": round(ratio, 3),
+        "overhead_bound": OVERHEAD_BOUND,
+        "overhead_ok": ratio <= OVERHEAD_BOUND,
+        "rows": hub.counts(),
+        "drift_families": sorted(drift.get("by_family", {})),
+        "drift_decisions": drift.get("n_decisions", 0),
+        "drift_mean_abs_err": round(
+            drift.get("overall", {}).get("mean_abs_err", 0.0), 4
+        ),
     }
 
 
@@ -93,14 +156,44 @@ def run() -> List[Row]:
         "target_wall_s": 60.0,
         "results": results,
     }
+    rows: List[Row] = []
+    if os.environ.get("REPRO_TELEMETRY"):
+        tel = _run_telemetry()
+        payload["telemetry"] = tel
+        rows.append(
+            Row(
+                "scale/eaco_10k_telemetry",
+                tel["wall_s_on"] * 1e6,
+                f"overhead={tel['overhead_ratio']}x "
+                f"(bound {OVERHEAD_BOUND}x, ok={tel['overhead_ok']}) "
+                f"families={len(tel['drift_families'])} "
+                f"decisions={tel['drift_decisions']} "
+                f"drift|err|={tel['drift_mean_abs_err']}",
+            )
+        )
     save_json("scale_bench.json", payload)
-    root = os.path.join(os.path.dirname(__file__), "..", "BENCH_scale.json")
-    with open(os.path.abspath(root), "w") as f:
-        json.dump(payload, f, indent=1)
+    write_bench(
+        "scale",
+        payload,
+        bench_meta(
+            trace,
+            fleet={"n_nodes": N_NODES, "sku_mix": [list(m) for m in SKU_MIX]},
+            queue_window=QUEUE_WINDOW,
+        ),
+    )
+
+    tel = payload.get("telemetry")
+    if tel and not tel["overhead_ok"]:  # nightly CI gate (artifacts are written)
+        raise RuntimeError(
+            f"telemetry overhead {tel['overhead_ratio']}x exceeds the "
+            f"{OVERHEAD_BOUND}x bound (off={tel['wall_s_off']}s "
+            f"on={tel['wall_s_on']}s)"
+        )
 
     e = results["eaco"]
     f = results["fifo_packed"]
-    return [
+    rows.insert(
+        0,
         Row(
             "scale/eaco_10k_hetero",
             e["wall_s"] * 1e6,
@@ -108,8 +201,9 @@ def run() -> List[Row]:
             f"done={e['jobs_done']}/{e['jobs_total']} "
             f"energy={e['total_energy_kwh']}kWh "
             f"(fifo_packed {f['total_energy_kwh']}kWh in {f['wall_s']}s)",
-        )
-    ]
+        ),
+    )
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,0 +1,46 @@
+"""Telemetry demo: replay a small trace with the ``repro.obs`` hub armed.
+
+Runs EaCO over a 120-job paper-mix trace with a ``TelemetryHub`` attached,
+prints the replay report (headline metrics + predictor-drift tables +
+event-loop profile), and writes a Perfetto/Chrome trace you can open at
+https://ui.perfetto.dev — one track per node, one span per job placement,
+a fleet-power counter on top.
+
+  PYTHONPATH=src python examples/telemetry_demo.py
+
+Set ``REPRO_EXAMPLES_FAST=1`` (the CI examples gate) to shrink the trace
+to a smoke-sized run.
+"""
+
+import os
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+FAST = bool(int(os.environ.get("REPRO_EXAMPLES_FAST", "0")))
+
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import TraceConfig, generate_trace, load_into
+from repro.core.eaco import EaCO
+from repro.obs import TelemetryConfig, TelemetryHub, render_report, write_perfetto
+
+
+def main() -> None:
+    hub = TelemetryHub(TelemetryConfig(profile=True))
+    sim = Simulator(SimConfig(n_nodes=28, seed=0), EaCO(), hub=hub)
+    trace = generate_trace(TraceConfig(n_jobs=30 if FAST else 120, seed=0))
+    load_into(sim, trace)
+    sim.run()
+    results = sim.results()
+
+    print(render_report(results, hub, title="telemetry demo — eaco"))
+
+    out = os.path.join(tempfile.gettempdir(), "repro_telemetry_demo.json")
+    write_perfetto(hub, out, results)
+    print(f"\nperfetto trace written to {out} — open it at https://ui.perfetto.dev")
+
+
+if __name__ == "__main__":
+    main()

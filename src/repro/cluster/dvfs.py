@@ -209,6 +209,8 @@ class PowerCapEnforcer:
             cands = self._steppable(sim, -1)
             if not cands:
                 self.infeasible_events += 1
+                if sim.telemetry is not None:
+                    sim.telemetry.cap_action(sim.now, "infeasible", -1, -1)
                 return
             # least SLO risk first = largest slack first
             node, ladder, step = max(
@@ -218,6 +220,8 @@ class PowerCapEnforcer:
             sim._apply_freq_step(node, step - 1)
             total += self._node_power(sim, node, node.freq) - before
             self.throttle_count += 1
+            if sim.telemetry is not None:
+                sim.telemetry.cap_action(sim.now, "throttle", node.id, step - 1)
 
     def _raise(self, sim, total: float) -> None:
         while True:
@@ -235,3 +239,5 @@ class PowerCapEnforcer:
             sim._apply_freq_step(node, step + 1)
             total += after - before
             self.raise_count += 1
+            if sim.telemetry is not None:
+                sim.telemetry.cap_action(sim.now, "raise", node.id, step + 1)

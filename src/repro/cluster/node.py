@@ -71,6 +71,12 @@ class Node:
         """Fleet-default throughput multiplier of this node's SKU."""
         return self.sku.speed if self.sku else 1.0
 
+    @property
+    def sku_name(self) -> str:
+        """This node's SKU name (``v100`` for the homogeneous reference
+        fleet, which runs the V100 power model)."""
+        return self.sku.name if self.sku else "v100"
+
     def job_speed(self, profile: JobProfile) -> float:
         """Throughput multiplier of ``profile`` on this node (the family's
         per-SKU override when present, else the SKU default)."""
@@ -167,6 +173,13 @@ class Node:
         if self.n_gpus == 0:
             return 0.0
         return sum(min(100.0, u) for u in self.util_raw) / self.n_gpus
+
+    def node_mem_util(self, peak: bool = True) -> float:
+        """Mean per-GPU (peak by default) memory utilization, percent."""
+        if self.n_gpus == 0:
+            return 0.0
+        raw = self.peak_raw if peak else self.mem_raw
+        return sum(min(100.0, m) for m in raw) / self.n_gpus
 
     def account_energy(self, now: float, jobs: Dict[int, Job], power: PowerModel):
         """Settle energy up to ``now`` at the draw implied by the current

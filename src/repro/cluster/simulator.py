@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -27,6 +28,7 @@ from repro.cluster.jobqueue import OrderedQueue
 from repro.cluster.node import Node, NodeState
 from repro.cluster.power import PowerModel, get_sku, v100_power_model
 from repro.elastic import scaling
+from repro.obs.hub import TelemetryHub
 
 
 @dataclasses.dataclass(order=True)
@@ -51,6 +53,12 @@ class SimConfig:
     straggler_factor: float = 1.5
     # bookkeeping
     active_node_sample_hours: float = 1.0
+    # bound on the retained ``active_node_samples`` list (<=0 = unbounded):
+    # when full it is decimated in place (every other sample dropped, the
+    # sampling stride doubled), so memory is O(cap) on arbitrarily long
+    # replays while ``avg_active_nodes`` — computed from O(1) running
+    # accumulators over ALL samples — is unaffected
+    active_node_sample_cap: int = 8192
     # hard co-location depth cap on the resize/migration path (the paper's
     # calibration stops at 4 jobs/GPU; schedulers' admission thresholds are
     # tighter still, and resizes must not exceed what admission would allow)
@@ -77,10 +85,17 @@ class Simulator:
         cfg: SimConfig,
         scheduler,
         power: Optional[PowerModel] = None,
+        hub: Optional[TelemetryHub] = None,
     ):
         self.cfg = cfg
         self.scheduler = scheduler
         self.power = power or v100_power_model()
+        # telemetry: ``None`` when absent OR disabled, so every hook site
+        # pays exactly one ``is not None`` check (the disabled-path golden
+        # test locks that a disabled hub is indistinguishable from no hub)
+        self.telemetry: Optional[TelemetryHub] = (
+            hub if hub is not None and hub.enabled else None
+        )
         self.rng = np.random.Generator(np.random.PCG64(cfg.seed))
         self.now = 0.0
         self._seq = 0
@@ -110,8 +125,15 @@ class Simulator:
         # signature -> ground-truth inflation (pure function of the
         # signature and the seed, so memoizable across rerates)
         self._infl_cache: Dict[Tuple[str, ...], float] = {}
-        # metrics
+        # metrics: the retained sample list is bounded (see
+        # ``active_node_sample_cap``); the average runs on exact O(1)
+        # accumulators over every sample ever taken (integer counts sum
+        # exactly in float division, so this matches np.mean bit-for-bit)
         self.active_node_samples: List[Tuple[float, int]] = []
+        self._active_sum = 0
+        self._active_count = 0
+        self._active_stride = 1
+        self._active_seen = 0
         self.deadline_violations: int = 0
         self.events_processed = 0
         self._dirty = False
@@ -137,6 +159,10 @@ class Simulator:
         self.power_cap = (
             dvfs.PowerCapEnforcer(cfg.power_cap_w) if cfg.power_cap_w > 0 else None
         )
+        if self.telemetry is not None:
+            self.telemetry.set_fleet(
+                [(n.id, n.sku_name, n.n_gpus) for n in self.nodes]
+            )
 
     # ------------------------------------------------------------------ util
 
@@ -249,15 +275,33 @@ class Simulator:
         self._last_progress_t[job.id] = self.now
         self._rerate(node)
         self._power_dirty = True
+        if self.telemetry is not None:
+            self.telemetry.job_event(
+                self.now, "place", job.id, job.profile.name, node_id,
+                len(job.gpu_ids), len(node.residents_on(job.gpu_ids)) - 1,
+            )
 
-    def deallocate(self, job: Job, to_queue: bool = True, checkpoint: bool = True) -> None:
+    def deallocate(
+        self,
+        job: Job,
+        to_queue: bool = True,
+        checkpoint: bool = True,
+        reason: str = "undo",
+    ) -> None:
         """Remove a job from its node (EaCO undo / failure / completion).
 
         ``checkpoint``: keep whole-epoch progress (the paper's epoch-boundary
         checkpointing); otherwise progress since the last epoch is lost too.
+        ``reason`` labels the telemetry record (``undo`` / ``failure`` /
+        ``resize``) — it does not change behaviour.
         """
         node = self.nodes[job.node_id]
         self._account_node(node)
+        if self.telemetry is not None:
+            self.telemetry.job_event(
+                self.now, "dealloc", job.id, job.profile.name, node.id,
+                len(job.gpu_ids), detail=reason,
+            )
         self._advance_progress(job)
         node.remove_job(job)
         if checkpoint:
@@ -359,10 +403,15 @@ class Simulator:
                     f"{self.cfg.resize_max_jobs_per_gpu} jobs/GPU"
                 )
         state = job.state
-        self.deallocate(job, to_queue=False, checkpoint=True)
+        self.deallocate(job, to_queue=False, checkpoint=True, reason="resize")
         self.allocate(job, target.id, gpu_ids)
         job.state = state  # preserve OBSERVING through the move
         job.resize_count += 1
+        if self.telemetry is not None:
+            self.telemetry.job_event(
+                self.now, "resize", job.id, job.profile.name, target.id,
+                len(gpu_ids),
+            )
 
     def request_resize(
         self,
@@ -491,6 +540,8 @@ class Simulator:
         node.freq = freq
         node.freq_step = step
         self.freq_change_count += 1
+        if self.telemetry is not None:
+            self.telemetry.freq_change(self.now, node.id, step, freq)
         self._rerate(node)
         self._dirty = True  # headroom moved: the scheduler may act on it
         self._power_dirty = True
@@ -522,6 +573,8 @@ class Simulator:
                     self._schedule_failure(n)
             self.push(0.0, "sample", None)
         self._done_count = sum(1 for j in self.jobs.values() if j.state == JobState.DONE)
+        tel = self.telemetry
+        prof = tel.profiler if tel is not None else None
         while self._heap:
             if self.jobs and self._done_count == len(self.jobs):
                 # everything already finished (e.g. a run() call after a
@@ -537,31 +590,78 @@ class Simulator:
                 break
             self.now = ev.time
             self.events_processed += 1
-            getattr(self, f"_ev_{ev.kind}")(ev.payload)
+            if prof is None:
+                getattr(self, f"_ev_{ev.kind}")(ev.payload)
+            else:
+                t0 = time.perf_counter()
+                getattr(self, f"_ev_{ev.kind}")(ev.payload)
+                prof.record(ev.kind, time.perf_counter() - t0)
             # reschedule only when allocation-relevant state changed — epoch
             # ticks alone cannot unblock a queued job (thresholds move on
             # completion/undo/repair), and scanning candidates on every epoch
             # event is O(queue x gpus) in Python.
             if self._dirty:
                 self._dirty = False
-                self.scheduler.try_schedule(self)
+                if prof is None:
+                    self.scheduler.try_schedule(self)
+                else:
+                    t0 = time.perf_counter()
+                    self.scheduler.try_schedule(self)
+                    prof.record("try_schedule", time.perf_counter() - t0)
             # fleet power only moves on allocation / state / frequency
             # changes: enforce the cap and refresh the peak exactly then,
             # still within the same event timestamp
             if self._power_dirty:
                 if self.power_cap is not None:
-                    self.power_cap.enforce(self)
+                    if prof is None:
+                        self.power_cap.enforce(self)
+                    else:
+                        t0 = time.perf_counter()
+                        self.power_cap.enforce(self)
+                        prof.record("cap_enforce", time.perf_counter() - t0)
                 self._power_dirty = False
                 p = self.fleet_power_w()
                 if p > self.peak_fleet_power_w:
                     self.peak_fleet_power_w = p
+                if tel is not None:
+                    tel.fleet_power_sample(self.now, p)
             if self._done_count == len(self.jobs):
                 break
         self.account_all()
 
+    def _record_active_sample(self, t: float, active: int) -> None:
+        """Fold one active-node sample: exact running accumulators always;
+        the retained list only every ``_active_stride``-th sample, decimated
+        in place (drop every other, double the stride) when it reaches
+        ``active_node_sample_cap``."""
+        self._active_sum += active
+        self._active_count += 1
+        if self._active_seen % self._active_stride == 0:
+            cap = self.cfg.active_node_sample_cap
+            if cap > 0 and len(self.active_node_samples) >= cap:
+                del self.active_node_samples[1::2]
+                self._active_stride *= 2
+                keep = (self._active_seen % self._active_stride) == 0
+            else:
+                keep = True
+            if keep:
+                self.active_node_samples.append((t, active))
+        self._active_seen += 1
+
     def _ev_sample(self, _):
         active = sum(1 for n in self.nodes if n.state == NodeState.ON)
-        self.active_node_samples.append((self.now, active))
+        self._record_active_sample(self.now, active)
+        tel = self.telemetry
+        if tel is not None:
+            tel.gauge(self.now, "active_nodes", active)
+            tel.gauge(self.now, "queued_jobs", len(self.queue))
+            if tel.cfg.node_samples:
+                for n in self.nodes:
+                    tel.node_sample(
+                        self.now, n.id, n.current_power_w(self.jobs, self.power),
+                        n.node_util(self.jobs), n.node_mem_util(), n.freq,
+                        n.state,
+                    )
         if self._done_count < len(self.jobs):
             self.push(self.now + self.cfg.active_node_sample_hours, "sample", None)
 
@@ -569,6 +669,11 @@ class Simulator:
         job = self.jobs[payload["job"]]
         self.queue.append(job.id)
         self._dirty = True
+        if self.telemetry is not None:
+            self.telemetry.job_event(
+                self.now, "submit", job.id, job.profile.name,
+                n_gpus=job.profile.n_gpus,
+            )
         self.scheduler.on_arrival(self, job)
 
     def _ev_epoch(self, payload):
@@ -602,6 +707,13 @@ class Simulator:
         self._makespan = max(self._makespan, job.finish_time)
         if job.finish_time > job.deadline:
             self.deadline_violations += 1
+        if self.telemetry is not None:
+            self.telemetry.job_event(
+                self.now, "complete", job.id, job.profile.name, node.id,
+                len(job.gpu_ids),
+            )
+            if self.telemetry.audit is not None:
+                self.telemetry.audit.on_complete(job, self.now)
         job.node_id = None
         self._rerate(node)
         self._power_dirty = True
@@ -622,7 +734,7 @@ class Simulator:
         victims = [self.jobs[i] for i in node.resident_job_ids()]
         for job in victims:
             # involuntary undo: resume from the last epoch checkpoint
-            self.deallocate(job, to_queue=True, checkpoint=True)
+            self.deallocate(job, to_queue=True, checkpoint=True, reason="failure")
             job.restart_count += 1
         node.state = NodeState.FAILED
         self._power_dirty = True
@@ -660,7 +772,6 @@ class Simulator:
         # runs once per results() call, not once per event.
         n_done = self._done_count
         total_e = sum(n.energy_kwh for n in self.nodes)
-        act = [a for _, a in self.active_node_samples]
         undo = restart = resize = 0
         job_e = 0.0
         for j in self.jobs.values():
@@ -668,7 +779,7 @@ class Simulator:
             restart += j.restart_count
             resize += j.resize_count
             job_e += j.energy_kwh
-        return {
+        out = {
             "total_energy_kwh": total_e,
             "jobs_done": n_done,
             "jobs_total": len(self.jobs),
@@ -676,7 +787,14 @@ class Simulator:
             "avg_jtt_h": self._jtt_sum / n_done if n_done else 0.0,
             "avg_wait_h": self._wait_sum / n_done if n_done else 0.0,
             "makespan_h": self._makespan,
-            "avg_active_nodes": float(np.mean(act)) if act else 0.0,
+            # integer samples sum exactly in float64, so the running
+            # accumulators reproduce np.mean over the full sample stream
+            # bit-for-bit even after the retained list is decimated
+            "avg_active_nodes": (
+                float(np.float64(self._active_sum) / np.float64(self._active_count))
+                if self._active_count
+                else 0.0
+            ),
             "deadline_violations": self.deadline_violations,
             "undo_count": undo,
             "restart_count": restart,
@@ -691,3 +809,8 @@ class Simulator:
                 self.power_cap.infeasible_events if self.power_cap else 0
             ),
         }
+        # present ONLY when event-loop profiling was armed, so the results
+        # dict stays byte-identical for every non-profiling run
+        if self.telemetry is not None and self.telemetry.profiler is not None:
+            out["profile"] = self.telemetry.profiler.summary()
+        return out

@@ -52,7 +52,24 @@ class _Base:
         return best
 
     def _alloc_whole_node(self, sim, job: Job, node: Node) -> None:
-        sim.allocate(job, node.id, tuple(range(job.profile.n_gpus)))
+        gpu_ids = tuple(range(job.profile.n_gpus))
+        tel = sim.telemetry
+        if tel is not None and tel.audit is not None:
+            # the baselines place as if sharing were free: audit their
+            # implicit prediction (inflation 1.0) against the ground truth,
+            # so the drift report quantifies the reality they ignore
+            residents = [sim.jobs[i] for i in node.residents_on(gpu_ids)]
+            profiles = [job.profile, *(r.profile for r in residents)]
+            realized = sim.true_inflation(profiles)
+            finish = sim.now + job.remaining_epochs * (
+                job.profile.epoch_hours * node.time_factor(job.profile)
+            )
+            tel.audit.decision(
+                sim.now, self.name, job, node.sku_name, node.id,
+                len(gpu_ids), len(residents), 0, node.freq,
+                1.0, realized, finish,
+            )
+        sim.allocate(job, node.id, gpu_ids)
 
 
 class FIFO(_Base):

@@ -107,8 +107,41 @@ class EaCO:
         """Hook invoked right after ``job`` lands on ``cand`` (no-op here;
         ``EaCOPowerCap`` applies its chosen frequency step)."""
 
-    def schedule_job(self, sim, job: Job, width: Optional[int] = None) -> bool:
-        """One pass of Alg. 1's nested loops for job j. True if allocated."""
+    def _audit_decision(
+        self, sim, job: Job, cand: Candidate, n_candidates: int, reason: str
+    ) -> None:
+        """Record the placement into the decision-audit log (no-op without
+        telemetry).  Read-only: the predicted inflation re-runs the trust
+        chain with ``count=False`` so H hit/miss stats stay untouched, and
+        the realized inflation reads the simulator's memoized ground truth
+        — the same value ``allocate`` just re-rated the residents with."""
+        tel = sim.telemetry
+        if tel is None or tel.audit is None:
+            return
+        node = sim.nodes[cand.node_id]
+        profiles = [job.profile, *(sim.jobs[i].profile for i in cand.resident_ids)]
+        predicted = self.predictor.predict_inflation(profiles, count=False)
+        realized = sim.true_inflation(profiles)
+        excl_h = scaling.epoch_hours_at(
+            job.profile, len(job.gpu_ids) or job.profile.n_gpus
+        )
+        predicted_finish = sim.now + job.remaining_epochs * (
+            excl_h * predicted * node.time_factor(job.profile)
+        )
+        tel.audit.decision(
+            sim.now, self.name, job, node.sku_name, cand.node_id,
+            len(job.gpu_ids), len(cand.resident_ids), n_candidates,
+            node.freq, predicted, realized, predicted_finish, reason=reason,
+        )
+
+    def schedule_job(
+        self, sim, job: Job, width: Optional[int] = None, reason: str = "queue"
+    ) -> bool:
+        """One pass of Alg. 1's nested loops for job j. True if allocated.
+
+        ``reason`` labels the admission path in the decision audit
+        (``queue`` for the normal drain, ``narrow`` for elastic
+        narrow-width admission)."""
         failed = self._failed.setdefault(job.id, set())
         cands = [
             c
@@ -134,6 +167,8 @@ class EaCO:
             )
             self._obs_by_node.setdefault(cand.node_id, set()).add(job.id)
         self._on_placed(sim, job, cand)
+        # after _on_placed so the audited frequency is the applied step
+        self._audit_decision(sim, job, cand, len(cands), reason)
         return True
 
     def _drop_obs(self, jid: int) -> None:

@@ -89,7 +89,7 @@ class EaCOElastic(EaCO):
                 continue
             top = min(job.profile.max_width, job.profile.n_gpus) - 1
             for width in range(top, job.profile.min_width - 1, -1):
-                if self.schedule_job(sim, job, width=width):
+                if self.schedule_job(sim, job, width=width, reason="narrow"):
                     break
 
     def try_schedule(self, sim) -> None:

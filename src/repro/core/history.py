@@ -34,17 +34,19 @@ class History:
                 if measured is not None:
                     self._data[tuple(sorted(sig))] = measured
 
-    def get(self, signature: Iterable[str]) -> Optional[float]:
+    def get(self, signature: Iterable[str], count: bool = True) -> Optional[float]:
         """Measured inflation for ``signature`` (None = miss; 1.0 for
-        singleton sets); updates the hit/miss counters."""
+        singleton sets); updates the hit/miss counters unless
+        ``count=False`` (telemetry reads must not distort the stats)."""
         key = tuple(sorted(signature))
         if len(key) <= 1:
             return 1.0
         val = self._data.get(key)
-        if val is None:
-            self.misses += 1
-        else:
-            self.hits += 1
+        if count:
+            if val is None:
+                self.misses += 1
+            else:
+                self.hits += 1
         return val
 
     def record(self, signature: Iterable[str], inflation: float) -> None:

@@ -28,13 +28,16 @@ class JCTPredictor:
     def __init__(self, history: History):
         self.history = history
 
-    def predict_inflation(self, profiles: Sequence[JobProfile]) -> float:
+    def predict_inflation(
+        self, profiles: Sequence[JobProfile], count: bool = True
+    ) -> float:
         """Epoch-time inflation estimate for a co-located set: history ->
-        calibrated table -> analytic model."""
+        calibrated table -> analytic model.  ``count=False`` leaves the
+        History hit/miss counters untouched (decision-audit reads)."""
         if len(profiles) <= 1:
             return 1.0
         sig = colocation.set_signature(profiles)
-        measured = self.history.get(sig)
+        measured = self.history.get(sig, count=count)
         if measured is not None:
             return measured
         calibrated = colocation.measured_inflation(sig)

@@ -37,21 +37,33 @@ class ElasticController:
     def step(self, sim) -> List[Plan]:
         """One proposal/apply round; returns the plans actually issued."""
         applied: List[Plan] = []
-        for plan in self.brain.propose(sim):
-            if len(applied) >= self.max_actions_per_step:
-                break
-            job = sim.jobs[plan.job_id]
-            node_id = plan.node_id if plan.node_id != job.node_id else None
-            if sim.request_resize(
-                job,
-                plan.width,
-                node_id=node_id,
-                expect_residents=plan.co_resident_ids,
-            ):
-                applied.append(plan)
-                self.stats.issued += 1
-                self.stats.by_kind[plan.kind] += 1
-                self.stats.predicted_saving_kwh -= plan.energy_delta_kwh
-            else:
-                self.stats.rejected += 1
+        plans = self.brain.propose(sim)
+        tel = sim.telemetry
+        for plan in plans:
+            issued = False
+            if len(applied) < self.max_actions_per_step:
+                job = sim.jobs[plan.job_id]
+                node_id = plan.node_id if plan.node_id != job.node_id else None
+                if sim.request_resize(
+                    job,
+                    plan.width,
+                    node_id=node_id,
+                    expect_residents=plan.co_resident_ids,
+                ):
+                    issued = True
+                    applied.append(plan)
+                    self.stats.issued += 1
+                    self.stats.by_kind[plan.kind] += 1
+                    self.stats.predicted_saving_kwh -= plan.energy_delta_kwh
+                else:
+                    self.stats.rejected += 1
+            if tel is not None:
+                tel.plan_event(
+                    sim.now, plan.kind, plan.job_id, plan.node_id, plan.width,
+                    plan.energy_delta_kwh, plan.jct_delta_h, issued,
+                )
+        if tel is not None and plans:
+            tel.brain_round(
+                sim.now, len(plans), len(applied), -plans[0].energy_delta_kwh
+            )
         return applied

@@ -22,7 +22,13 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # the packages whose public API the docstring gate covers
-PACKAGES = ("repro.cluster", "repro.core", "repro.elastic", "repro.bridge")
+PACKAGES = (
+    "repro.cluster",
+    "repro.core",
+    "repro.elastic",
+    "repro.bridge",
+    "repro.obs",
+)
 
 # names that look public but are inherited machinery / trivially documented
 # by their class (dataclass auto-methods, enum-ish constants, etc.)
