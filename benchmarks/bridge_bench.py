@@ -85,21 +85,18 @@ def run() -> List[Row]:
             "n_signatures": len(cal.signatures),
             "version": cal.version,
         },
-        "trace": {"n_jobs": N_JOBS, "seed": TRACE.seed, "mix": TRACE.mix,
+        # n_jobs / fleet live in meta only (schema v2)
+        "trace": {"seed": TRACE.seed, "mix": TRACE.mix,
                   "elastic_frac": TRACE.elastic_frac},
-        "fleet": {"n_nodes": N_NODES},
         "results": results,
     }
-    save_json("bridge_bench.json", payload)
-    write_bench(
-        "bridge",
-        payload,
-        bench_meta(
-            trace,
-            fleet={"n_nodes": N_NODES},
-            calibration_version=cal.version,
-        ),
+    meta = bench_meta(
+        trace,
+        fleet={"n_nodes": N_NODES},
+        calibration_version=cal.version,
     )
+    save_json("bridge_bench.json", {"meta": meta, **payload})
+    write_bench("bridge", payload, meta)
 
     c = results["eaco_calibrated"]
     p = results["eaco_precalibration"]

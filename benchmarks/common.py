@@ -12,7 +12,10 @@ ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 # bump when the shape of the BENCH_*.json payloads changes incompatibly
-BENCH_SCHEMA_VERSION = 1
+#   v2: run context (n_jobs / fleet / queue_window / ...) lives only in
+#       ``meta`` — v1 duplicated it at the top level of the payload; read
+#       it through ``bench_context`` to stay compatible with both
+BENCH_SCHEMA_VERSION = 2
 
 # the runner (benchmarks/run.py) exports a single wall-clock timestamp so
 # every BENCH file of one sweep carries the same stamp; direct module
@@ -90,6 +93,24 @@ def bench_meta(
         meta["timestamp"] = ts
     meta.update(extra)
     return meta
+
+
+def bench_context(bench: Dict[str, Any], key: str, default: Any = None) -> Any:
+    """Read a run-context field (``n_jobs``, ``fleet``, ``queue_window``,
+    ...) from a BENCH payload, wherever its schema version put it: ``meta``
+    first (v2 emits context only there), then the payload top level (v1
+    duplicated it).  Lets the regression gate compare v1 baselines against
+    v2 artifacts."""
+    meta = bench.get("meta")
+    if isinstance(meta, dict) and key in meta:
+        return meta[key]
+    if key in bench:
+        return bench[key]
+    # v1 scale/dvfs also nested n_jobs under the trace block
+    trace = bench.get("trace")
+    if isinstance(trace, dict) and key in trace:
+        return trace[key]
+    return default
 
 
 def write_bench(name: str, payload: Dict[str, Any], meta: Dict[str, Any]) -> str:

@@ -98,10 +98,8 @@ def run() -> List[Row]:
         capped[f"cap_{int(frac * 100)}"] = r
 
     payload = {
-        "trace": {"n_jobs": N_JOBS, "seed": TRACE.seed,
-                  "generator": "philly_style_production"},
-        "fleet": {"n_nodes": N_NODES, "sku_mix": [list(m) for m in SKU_MIX]},
-        "queue_window": QUEUE_WINDOW,
+        # n_jobs / fleet / queue_window live in meta only (schema v2)
+        "trace": {"seed": TRACE.seed, "generator": "philly_style_production"},
         "uncapped_eaco": base,
         "eaco_powercap": capped,
         "acceptance": {
@@ -113,17 +111,14 @@ def run() -> List[Row]:
             ),
         },
     }
-    save_json("dvfs_bench.json", payload)
-    write_bench(
-        "dvfs",
-        payload,
-        bench_meta(
-            trace,
-            fleet={"n_nodes": N_NODES, "sku_mix": [list(m) for m in SKU_MIX]},
-            queue_window=QUEUE_WINDOW,
-            cap_fractions=list(CAP_FRACTIONS),
-        ),
+    meta = bench_meta(
+        trace,
+        fleet={"n_nodes": N_NODES, "sku_mix": [list(m) for m in SKU_MIX]},
+        queue_window=QUEUE_WINDOW,
+        cap_fractions=list(CAP_FRACTIONS),
     )
+    save_json("dvfs_bench.json", {"meta": meta, **payload})
+    write_bench("dvfs", payload, meta)
 
     rows = []
     for key, r in capped.items():

@@ -73,9 +73,8 @@ def run() -> List[Row]:
     save_json("elastic_bench.json", payload)
 
     bench = {
-        "trace": {"n_jobs": TRACE.n_jobs, "seed": TRACE.seed,
-                  "elastic_frac": TRACE.elastic_frac},
-        "cluster": SIM,
+        # n_jobs / fleet live in meta only (schema v2)
+        "trace": {"seed": TRACE.seed, "elastic_frac": TRACE.elastic_frac},
         "results": payload,
     }
     write_bench("elastic", bench, bench_meta(trace, fleet=dict(SIM)))

@@ -30,7 +30,9 @@ import json
 import os
 import sys
 
-from benchmarks.common import REPO_ROOT, TIMESTAMP_ENV, check_regression
+from benchmarks.common import (
+    REPO_ROOT, TIMESTAMP_ENV, bench_context, check_regression,
+)
 
 REGRESSION_TOLERANCE = 0.10
 
@@ -86,6 +88,22 @@ def main() -> None:
             fresh = _snapshot_benches().get(fn)
             if fresh is None:
                 continue  # the sweep did not regenerate this file
+            # context lives in meta (schema v2) or at the top level (v1):
+            # only compare runs of the same workload shape
+            mismatched = [
+                key
+                for key in ("n_jobs", "fleet", "queue_window")
+                if bench_context(base, key) is not None
+                and bench_context(fresh, key) is not None
+                and bench_context(base, key) != bench_context(fresh, key)
+            ]
+            if mismatched:
+                print(
+                    f"check,0.00,SKIP {fn}: context changed "
+                    f"({', '.join(mismatched)}) — baselines not comparable",
+                    flush=True,
+                )
+                continue
             for problem in check_regression(
                 base, fresh, tolerance=REGRESSION_TOLERANCE
             ):

@@ -1,0 +1,217 @@
+"""Parallel configuration-sweep runner (scheduler x power cap x fleet).
+
+Replays one Philly-style production trace per grid point — every
+(scheduler, cluster power-cap fraction, fleet size) combination — across
+a ``multiprocessing`` pool, and consolidates all points into a single
+``benchmarks/artifacts/sweep.json`` plus the repo-root ``BENCH_sweep.json``
+trajectory file.  Each point is an independent deterministic replay
+(fixed seeds, no cross-point state), so results are identical at any
+worker count; ``--procs`` only changes wall-clock.
+
+Cap fractions are relative to the fleet's nameplate draw (every node at
+100% utilization, full clock), so a point's cap is a pure function of its
+fleet — points never depend on each other's observed peaks.
+
+Modes:
+  (default)    full grid: {eaco, eaco-powercap, fifo-packed} x
+               {1.0, 0.9, 0.8} x {48, 96} nodes, 2000 jobs/point
+  ``--smoke``  3-point slice (one scheduler axis sample per family,
+               500 jobs, 48 nodes) for the nightly CI job
+"""
+
+from __future__ import annotations
+
+import argparse
+import multiprocessing
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from benchmarks.common import Row, bench_meta, save_json, write_bench
+from repro.cluster.power import fleet_skus
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import (
+    ProductionTraceConfig,
+    generate_production_trace,
+    load_into,
+)
+
+SKU_MIX = (("v100", 0.5), ("a100", 0.5))
+QUEUE_WINDOW = 64  # same backlog-scan bound as scale_bench.py
+
+SCHEDULERS = ("eaco", "eaco-powercap", "fifo-packed")
+CAP_FRACTIONS = (1.0, 0.9, 0.8)  # 1.0 = uncapped
+FLEET_SIZES = (48, 96)
+
+# the smoke slice: one point per scheduler family, one capped point
+SMOKE_GRID = (
+    ("eaco", 1.0, 48),
+    ("eaco-powercap", 0.8, 48),
+    ("fifo-packed", 1.0, 48),
+)
+
+TRACE_SHAPE = dict(
+    seed=0,
+    arrival_rate_per_hour=40.0,
+    duration_mu_ln_h=-0.5,
+    duration_sigma_ln_h=1.4,
+)
+
+
+def _make_scheduler(name: str):
+    # imported lazily so workers pay only for the scheduler they run
+    if name == "eaco":
+        from repro.core.eaco import EaCO
+
+        return EaCO(queue_window=QUEUE_WINDOW)
+    if name == "eaco-powercap":
+        from repro.core.eaco_powercap import EaCOPowerCap
+
+        return EaCOPowerCap(queue_window=QUEUE_WINDOW)
+    if name == "fifo-packed":
+        from repro.core.baselines import FIFOPacked
+
+        return FIFOPacked()
+    raise ValueError(f"unknown scheduler {name!r}")
+
+
+def _nameplate_w(sim: Simulator) -> float:
+    """Fleet draw with every node at 100% utilization, full clock."""
+    return sum(
+        (n.sku.power if n.sku else sim.power).node_power_at(100.0, 1.0)
+        for n in sim.nodes
+    )
+
+
+def run_point(point: Tuple[str, float, int, int]) -> Dict[str, Any]:
+    """One grid point, self-contained (runs inside a pool worker)."""
+    sched_name, cap_frac, n_nodes, n_jobs = point
+    trace = generate_production_trace(
+        ProductionTraceConfig(n_jobs=n_jobs, **TRACE_SHAPE)
+    )
+    cfg = SimConfig(
+        n_nodes=n_nodes, seed=0, node_skus=fleet_skus(n_nodes, SKU_MIX)
+    )
+    if cap_frac < 1.0:
+        probe = Simulator(cfg, _make_scheduler(sched_name))
+        cap_w = _nameplate_w(probe) * cap_frac
+        cfg = SimConfig(
+            n_nodes=n_nodes,
+            seed=0,
+            node_skus=fleet_skus(n_nodes, SKU_MIX),
+            power_cap_w=cap_w,
+        )
+    sim = Simulator(cfg, _make_scheduler(sched_name))
+    load_into(sim, trace)
+    t0 = time.perf_counter()
+    sim.run(until=10_000_000)
+    wall_s = time.perf_counter() - t0
+    r = sim.results()
+    return {
+        "scheduler": sched_name,
+        "cap_fraction": cap_frac,
+        "n_nodes": n_nodes,
+        "n_jobs": n_jobs,
+        "wall_s": round(wall_s, 2),
+        "events": sim.events_processed,
+        "events_per_s": int(sim.events_processed / wall_s) if wall_s else 0,
+        "jobs_done": r["jobs_done"],
+        "total_energy_kwh": round(r["total_energy_kwh"], 1),
+        "avg_jct_h": round(r["avg_jct_h"], 4),
+        "avg_jtt_h": round(r["avg_jtt_h"], 4),
+        "makespan_h": round(r["makespan_h"], 1),
+        "avg_active_nodes": round(r["avg_active_nodes"], 2),
+        "deadline_violations": r["deadline_violations"],
+        "peak_fleet_power_w": round(r["peak_fleet_power_w"], 1),
+        "power_cap_w": round(r["power_cap_w"], 1),
+        "cap_throttle_count": r["cap_throttle_count"],
+    }
+
+
+def _point_key(p: Dict[str, Any]) -> str:
+    return f"{p['scheduler']}/cap{int(p['cap_fraction'] * 100)}/n{p['n_nodes']}"
+
+
+def run_sweep(
+    smoke: bool = False, procs: Optional[int] = None, n_jobs: Optional[int] = None
+) -> Dict[str, Any]:
+    if smoke:
+        jobs = n_jobs or 500
+        grid = [(s, c, n, jobs) for s, c, n in SMOKE_GRID]
+    else:
+        jobs = n_jobs or 2000
+        grid = [
+            (s, c, n, jobs)
+            for s in SCHEDULERS
+            for c in CAP_FRACTIONS
+            for n in FLEET_SIZES
+        ]
+    procs = procs or min(len(grid), multiprocessing.cpu_count())
+    t0 = time.perf_counter()
+    if procs > 1:
+        with multiprocessing.Pool(processes=procs) as pool:
+            results = pool.map(run_point, grid)
+    else:
+        results = [run_point(p) for p in grid]
+    wall_s = time.perf_counter() - t0
+
+    points = {_point_key(p): p for p in results}
+    payload = {
+        "mode": "smoke" if smoke else "full",
+        "wall_s": round(wall_s, 2),
+        "procs": procs,
+        "points": points,
+    }
+    meta = bench_meta(
+        fleet={"sku_mix": [list(m) for m in SKU_MIX], "sizes": sorted(
+            {p[2] for p in grid}
+        )},
+        queue_window=QUEUE_WINDOW,
+        n_jobs=jobs,
+        grid={
+            "schedulers": sorted({p[0] for p in grid}),
+            "cap_fractions": sorted({p[1] for p in grid}),
+            "fleet_sizes": sorted({p[2] for p in grid}),
+        },
+    )
+    save_json("sweep.json", {"meta": meta, **payload})
+    write_bench("sweep", payload, meta)
+    return payload
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="3-point grid slice (nightly CI mode)",
+    )
+    ap.add_argument(
+        "--procs", type=int, default=None,
+        help="worker processes (default: min(grid, cpu_count))",
+    )
+    ap.add_argument(
+        "--n-jobs", type=int, default=None,
+        help="jobs per grid point (default: 2000 full / 500 smoke)",
+    )
+    args = ap.parse_args(argv)
+    payload = run_sweep(smoke=args.smoke, procs=args.procs, n_jobs=args.n_jobs)
+    print("name,us_per_call,derived")
+    for key, p in sorted(payload["points"].items()):
+        print(
+            Row(
+                f"sweep/{key}",
+                p["wall_s"] * 1e6,
+                f"energy={p['total_energy_kwh']}kWh jct={p['avg_jct_h']}h "
+                f"events/s={p['events_per_s']} done={p['jobs_done']}/{p['n_jobs']} "
+                f"peak={p['peak_fleet_power_w']}W",
+            )
+        )
+    incomplete = [k for k, p in payload["points"].items() if p["jobs_done"] < p["n_jobs"]]
+    if incomplete:
+        print(f"sweep,0.00,INCOMPLETE points: {', '.join(sorted(incomplete))}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -178,10 +178,19 @@ class PowerCapEnforcer:
         scheduler-chosen ``target_step``."""
         from repro.cluster.node import NodeState
 
+        fleet = getattr(sim, "fleet", None)
+        if fleet is not None:
+            # the ON-and-busy index set IS the steppable universe, already
+            # in the full scan's ascending-id order
+            candidates = (sim.nodes[i] for i in sorted(fleet.on_busy))
+        else:
+            candidates = (
+                n
+                for n in sim.nodes
+                if n.state == NodeState.ON and not n.is_idle()
+            )
         out = []
-        for node in sim.nodes:
-            if node.state != NodeState.ON or node.is_idle():
-                continue
+        for node in candidates:
             ladder = node_ladder(node)
             step = node.freq_step if node.freq_step is not None else ladder.top
             if direction < 0 and step > 0:

@@ -59,6 +59,14 @@ class OrderedQueue:
         jid, _ = self._od.popitem(last=False)
         return jid
 
+    def first_n(self, n: int) -> list:
+        """The first ``n`` queued ids as a list (every id when ``n <= 0``)
+        — O(n), unlike ``list(queue)[:n]`` which materializes the whole
+        backlog before slicing."""
+        if n <= 0:
+            return list(self._od)
+        return list(itertools.islice(self._od, n))
+
     def __contains__(self, jid: int) -> bool:
         return jid in self._od
 

@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.cluster import colocation, dvfs
+from repro.cluster.fleet import FleetState
 from repro.cluster.job import Job, JobProfile, JobState
 from repro.cluster.jobqueue import OrderedQueue
 from repro.cluster.node import Node, NodeState
@@ -30,13 +31,10 @@ from repro.cluster.power import PowerModel, get_sku, v100_power_model
 from repro.elastic import scaling
 from repro.obs.hub import TelemetryHub
 
-
-@dataclasses.dataclass(order=True)
-class _Event:
-    time: float
-    seq: int
-    kind: str = dataclasses.field(compare=False)
-    payload: Any = dataclasses.field(compare=False, default=None)
+# Events are plain ``(time, seq, kind, payload)`` tuples: the heap orders
+# them by (time, seq) and seq is unique, so kind/payload never compare —
+# tuple comparison in C replaced a Python-level ``__lt__`` that alone cost
+# ~1 us per push/pop pair at 10k-job scale.
 
 
 @dataclasses.dataclass
@@ -99,7 +97,7 @@ class Simulator:
         self.rng = np.random.Generator(np.random.PCG64(cfg.seed))
         self.now = 0.0
         self._seq = 0
-        self._heap: List[_Event] = []
+        self._heap: List[Tuple[float, int, str, Any]] = []
         if cfg.node_skus is not None and len(cfg.node_skus) != cfg.n_nodes:
             raise ValueError(
                 f"node_skus has {len(cfg.node_skus)} entries for "
@@ -113,6 +111,10 @@ class Simulator:
             )
             for i in range(cfg.n_nodes)
         ]
+        # struct-of-arrays mirror of per-node state (power/freq columns,
+        # state x idleness index sets, idle-class heaps): the hot loops
+        # read these instead of rescanning ``self.nodes``
+        self.fleet = FleetState(self.nodes)
         self.jobs: Dict[int, Job] = {}
         # arrival-ordered job ids awaiting allocation (O(1) remove/front-insert)
         self.queue = OrderedQueue()
@@ -159,6 +161,14 @@ class Simulator:
         self.power_cap = (
             dvfs.PowerCapEnforcer(cfg.power_cap_w) if cfg.power_cap_w > 0 else None
         )
+        # event dispatch table (kind -> bound handler): collected from every
+        # ``_ev_<kind>`` method so subclass handlers register automatically;
+        # run() falls back to getattr for kinds pushed after construction
+        self._dispatch: Dict[str, Callable[[Any], None]] = {
+            name[4:]: getattr(self, name)
+            for name in dir(self)
+            if name.startswith("_ev_")
+        }
         if self.telemetry is not None:
             self.telemetry.set_fleet(
                 [(n.id, n.sku_name, n.n_gpus) for n in self.nodes]
@@ -169,7 +179,7 @@ class Simulator:
     def push(self, time: float, kind: str, payload: Any = None) -> None:
         """Enqueue an event (dispatched to ``_ev_<kind>`` at ``time``)."""
         self._seq += 1
-        heapq.heappush(self._heap, _Event(time, self._seq, kind, payload))
+        heapq.heappush(self._heap, (time, self._seq, kind, payload))
 
     def true_inflation(self, profiles: Sequence[JobProfile]) -> float:
         """Ground truth the simulator runs on: calibrated model + job-set
@@ -207,25 +217,33 @@ class Simulator:
 
     def _rerate(self, node: Node) -> None:
         """Recompute rates for every resident of ``node`` after a change."""
+        jobs = self.jobs
+        rates = self._rate
+        residents_on = node.residents_on
         for jid in node.resident_job_ids():
-            job = self.jobs[jid]
+            job = jobs[jid]
             self._advance_progress(job)
-            others = [j for j in self._coresidents(job)]
-            infl = self.true_inflation([j.profile for j in others])
+            infl = self.true_inflation(
+                [jobs[i].profile for i in residents_on(job.gpu_ids)]
+            )
             # width-aware exclusive epoch time: identical to
             # profile.epoch_hours at the reference width
             excl_h = scaling.epoch_hours_at(job.profile, len(job.gpu_ids))
             epoch_h = excl_h * infl * node.time_factor(job.profile)
-            self._rate[jid] = 1.0 / epoch_h
+            rates[jid] = 1.0 / epoch_h
             self._schedule_epoch_event(job)
 
     def _advance_progress(self, job: Job) -> None:
-        t0 = self._last_progress_t.get(job.id, self.now)
-        if job.id in self._rate and self.now > t0:
-            job.epochs_done = min(
-                job.profile.epochs, job.epochs_done + self._rate[job.id] * (self.now - t0)
-            )
-        self._last_progress_t[job.id] = self.now
+        jid = job.id
+        now = self.now
+        t0 = self._last_progress_t.get(jid, now)
+        if now > t0:
+            rate = self._rate.get(jid)
+            if rate:  # rates are strictly positive while a job runs
+                job.epochs_done = min(
+                    job.profile.epochs, job.epochs_done + rate * (now - t0)
+                )
+        self._last_progress_t[jid] = now
 
     @staticmethod
     def _next_epoch_boundary(done: float, total_epochs: int) -> float:
@@ -244,17 +262,18 @@ class Simulator:
         )
 
     def _schedule_epoch_event(self, job: Job) -> None:
-        self._epoch_event_ver[job.id] = self._epoch_event_ver.get(job.id, 0) + 1
-        rate = self._rate.get(job.id)
+        jid = job.id
+        vers = self._epoch_event_ver
+        ver = vers.get(jid, 0) + 1
+        vers[jid] = ver
+        rate = self._rate.get(jid)
         if not rate:
             return
         target = self._next_epoch_boundary(job.epochs_done, job.profile.epochs)
         dt = max(target - job.epochs_done, 0.0) / rate
-        self.push(
-            self.now + dt,
-            "epoch",
-            {"job": job.id, "ver": self._epoch_event_ver[job.id]},
-        )
+        # hot path: push() inlined (one epoch event per epoch per job)
+        self._seq += 1
+        heapq.heappush(self._heap, (self.now + dt, self._seq, "epoch", (jid, ver)))
 
     def allocate(self, job: Job, node_id: int, gpu_ids: Sequence[int]) -> None:
         """Place ``job`` on ``gpu_ids`` of ``node_id`` now: wakes a sleeping
@@ -505,16 +524,50 @@ class Simulator:
         node.account_energy(self.now, self.jobs, self.power)
 
     def account_all(self) -> None:
-        """Settle every node's energy up to ``now`` (end-of-run flush)."""
-        for n in self.nodes:
-            self._account_node(n)
+        """Settle every node's energy up to ``now`` (end-of-run flush) in
+        one vectorized pass: per-node kWh = power x dt / 1000 computed
+        columnwise over the fleet power column.  Elementwise float64 ops
+        are bit-identical to the scalar settlement they replace (locked by
+        ``tests/test_fleet_vectorized.py``); per-job attribution still
+        walks each settled node's residents."""
+        nodes = self.nodes
+        if not nodes:
+            return
+        now = self.now
+        self.fleet_power_w()  # refresh the power column
+        last = np.array([n.last_account_time for n in nodes], dtype=np.float64)
+        p = np.array(self.fleet.power, dtype=np.float64)
+        # .tolist() yields exact Python floats of the same bits
+        kwh = (p * (now - last) / 1000.0).tolist()
+        jobs = self.jobs
+        for i, n in enumerate(nodes):
+            if now > n.last_account_time:
+                n.energy_kwh += kwh[i]
+                if n._resident_count and n.state == NodeState.ON:
+                    n._attribute(kwh[i], jobs)
+            n.last_account_time = now
+
+    def idle_on_node_ids(self) -> List[int]:
+        """Ids of powered-on nodes with no residents, ascending (what the
+        schedulers' sleep pass parks), read from the fleet index sets."""
+        return sorted(self.fleet.on_idle)
 
     # ----------------------------------------------------------- DVFS / cap
 
     def fleet_power_w(self) -> float:
         """Instantaneous cluster draw (W) across all nodes, at their
-        current states, utilizations and frequency steps."""
-        return sum(n.current_power_w(self.jobs, self.power) for n in self.nodes)
+        current states, utilizations and frequency steps.  Reads the fleet
+        power column, recomputing only nodes whose draw-relevant state
+        changed since the last call; the sum runs in node-id order, so the
+        result is bit-identical to the full per-node scan it replaced."""
+        fleet = self.fleet
+        dirty = fleet.power_dirty
+        if dirty:
+            jobs, pm, nodes, power = self.jobs, self.power, self.nodes, fleet.power
+            for i in dirty:
+                power[i] = nodes[i].current_power_w(jobs, pm)
+            dirty.clear()
+        return sum(fleet.power)
 
     def set_frequency(self, node_id: int, step: int) -> None:
         """Clock ``node_id`` to ladder ``step`` immediately (scheduler
@@ -575,27 +628,44 @@ class Simulator:
         self._done_count = sum(1 for j in self.jobs.values() if j.state == JobState.DONE)
         tel = self.telemetry
         prof = tel.profiler if tel is not None else None
-        while self._heap:
-            if self.jobs and self._done_count == len(self.jobs):
+        heap = self._heap
+        heappop = heapq.heappop
+        dispatch = self._dispatch
+        jobs = self.jobs
+        while heap:
+            if jobs and self._done_count == len(jobs):
                 # everything already finished (e.g. a run() call after a
                 # pause landed past the last completion): leave trailing
                 # bookkeeping events unprocessed, exactly as the in-loop
                 # break below does
                 break
-            ev = heapq.heappop(self._heap)
-            if until is not None and ev.time > until:
-                # not ours to process: put it back so a later run() resumes
-                # exactly where this one paused
-                heapq.heappush(self._heap, ev)
+            t = heap[0][0]
+            if until is not None and t > until:
+                # not ours to process: leave it queued so a later run()
+                # resumes exactly where this one paused
                 break
-            self.now = ev.time
-            self.events_processed += 1
-            if prof is None:
-                getattr(self, f"_ev_{ev.kind}")(ev.payload)
-            else:
-                t0 = time.perf_counter()
-                getattr(self, f"_ev_{ev.kind}")(ev.payload)
-                prof.record(ev.kind, time.perf_counter() - t0)
+            self.now = t
+            # same-timestamp batch: drain every event at exactly this time,
+            # then run scheduling / cap enforcement once for the batch (the
+            # event-coalescing contract — see docs/architecture.md)
+            while True:
+                _, _, kind, payload = heappop(heap)
+                self.events_processed += 1
+                handler = dispatch.get(kind)
+                if handler is None:
+                    handler = getattr(self, f"_ev_{kind}")
+                if prof is None:
+                    handler(payload)
+                else:
+                    t0 = time.perf_counter()
+                    handler(payload)
+                    prof.record(kind, time.perf_counter() - t0)
+                if (
+                    not heap
+                    or heap[0][0] != t
+                    or self._done_count == len(jobs)
+                ):
+                    break
             # reschedule only when allocation-relevant state changed — epoch
             # ticks alone cannot unblock a queued job (thresholds move on
             # completion/undo/repair), and scanning candidates on every epoch
@@ -625,7 +695,7 @@ class Simulator:
                     self.peak_fleet_power_w = p
                 if tel is not None:
                     tel.fleet_power_sample(self.now, p)
-            if self._done_count == len(self.jobs):
+            if self._done_count == len(jobs):
                 break
         self.account_all()
 
@@ -649,7 +719,9 @@ class Simulator:
         self._active_seen += 1
 
     def _ev_sample(self, _):
-        active = sum(1 for n in self.nodes if n.state == NodeState.ON)
+        # |ON| == |on idle| + |on busy| from the fleet index sets: O(1)
+        # instead of a fleet scan per sample tick
+        active = len(self.fleet.on_idle) + len(self.fleet.on_busy)
         self._record_active_sample(self.now, active)
         tel = self.telemetry
         if tel is not None:
@@ -677,9 +749,10 @@ class Simulator:
         self.scheduler.on_arrival(self, job)
 
     def _ev_epoch(self, payload):
-        job = self.jobs[payload["job"]]
-        if payload["ver"] != self._epoch_event_ver.get(job.id):
+        jid, ver = payload
+        if ver != self._epoch_event_ver.get(jid):
             return  # stale (rates changed since scheduling)
+        job = self.jobs[jid]
         if job.state not in (JobState.RUNNING, JobState.OBSERVING):
             return
         node = self.nodes[job.node_id]

@@ -42,13 +42,22 @@ class _Base:
         the free node where ``job`` runs fastest (the paper's baselines are
         energy-oblivious — they chase JCT, not perf/watt, which is exactly
         why they leave the hetero savings on the table)."""
+        fleet = getattr(sim, "fleet", None)
+        if fleet is not None:
+            free = sorted(fleet.on_idle)  # == the full scan's visit order
+        else:
+            free = [
+                n.id
+                for n in sim.nodes
+                if n.state == NodeState.ON and n.is_idle()
+            ]
         best: Optional[Node] = None
         best_speed = 0.0
-        for node in sim.nodes:
-            if node.state == NodeState.ON and node.is_idle():
-                speed = node.job_speed(job.profile) if job else node.speed
-                if speed > best_speed:  # strict: ties keep the first (seed order)
-                    best, best_speed = node, speed
+        for nid in free:
+            node = sim.nodes[nid]
+            speed = node.job_speed(job.profile) if job else node.speed
+            if speed > best_speed:  # strict: ties keep the first (seed order)
+                best, best_speed = node, speed
         return best
 
     def _alloc_whole_node(self, sim, job: Job, node: Node) -> None:

@@ -31,6 +31,12 @@ from repro.core.predictor import JCTPredictor
 from repro.elastic import scaling
 
 
+def _rank_key(c: Candidate) -> Tuple[float, float]:
+    """EaCO's candidate sort key (shared by the full ``_rank`` sort and the
+    first-candidate fast path in ``schedule_job`` — both must agree)."""
+    return (-c.utilization, -c.perf_per_watt)
+
+
 @dataclasses.dataclass
 class _Observation:
     node_id: int
@@ -44,6 +50,12 @@ class EaCO:
 
     name = "eaco"
     sleeps_idle_nodes = True
+    # Idle nodes of one (SKU, gpu-count) class are indistinguishable to this
+    # ranker (utilization 0, class-determined speed/perf-per-watt/freq) and
+    # to the Eq. 2 gate, so FindCandidates may emit just the lowest-id
+    # representative per class — the exact node the full list would pick.
+    # Index-budgeted subclasses (EaCOPowerCap) must turn this off.
+    idle_candidate_dedup = True
 
     def __init__(
         self,
@@ -71,7 +83,7 @@ class EaCO:
         """Highest utilization first (Alg. 1 line 5); among equally hot
         sets, prefer the SKU with the best perf/watt — on a heterogeneous
         fleet the same packing decision is cheaper in joules there."""
-        return sorted(candidates, key=lambda c: (-c.utilization, -c.perf_per_watt))
+        return sorted(candidates, key=_rank_key)
 
     def _admit(
         self, sim, job: Job, cand: Candidate, width: Optional[int] = None,
@@ -143,12 +155,35 @@ class EaCO:
         (``queue`` for the normal drain, ``narrow`` for elastic
         narrow-width admission)."""
         failed = self._failed.setdefault(job.id, set())
-        cands = [
-            c
-            for c in find_candidates(sim, job, self.thresholds, width=width)
-            if (c.node_id, c.gpu_ids) not in failed
-        ]
-        cand = self._choose(sim, job, self._rank(cands), width)
+        # dedup only while the failed set is empty: an excluded idle set
+        # must not silence its whole class (another member would still be
+        # admissible in the full enumeration)
+        cands = find_candidates(
+            sim, job, self.thresholds, width=width,
+            dedup_idle=self.idle_candidate_dedup and not failed,
+        )
+        if failed:
+            cands = [c for c in cands if (c.node_id, c.gpu_ids) not in failed]
+        cls = type(self)
+        if cands and cls._rank is EaCO._rank and cls._choose is EaCO._choose:
+            # Fast path when neither the ranking nor the choice is
+            # overridden: the top-ranked candidate almost always admits, so
+            # find it in one O(n) ``min`` pass and only materialize the
+            # full sort if its Eq. 2 gate fails.  ``min`` keeps the first
+            # minimal element, exactly like the stable sort's front — the
+            # admission sequence (and its History side effects) is
+            # identical to scanning the ranked list.
+            best = min(cands, key=_rank_key)
+            if self._admit(sim, job, best, width):
+                cand = best
+            else:
+                cand = None
+                for c in self._rank(cands)[1:]:
+                    if self._admit(sim, job, c, width):
+                        cand = c
+                        break
+        else:
+            cand = self._choose(sim, job, self._rank(cands), width)
         if cand is None:
             return False
         sim.allocate(job, cand.node_id, cand.gpu_ids)
@@ -191,14 +226,12 @@ class EaCO:
         # inflates residents, so a job that failed earlier in the pass
         # cannot succeed later in it — the old restart-on-progress loop
         # re-scanned the whole queue O(q) times for identical decisions.
-        ids = list(sim.queue)
-        if self.queue_window:
-            ids = ids[: self.queue_window]
-        for jid in ids:
-            job = sim.jobs[jid]
-            if job.state != JobState.QUEUED:
-                continue
-            self.schedule_job(sim, job)
+        if sim.queue:
+            for jid in sim.queue.first_n(self.queue_window):
+                job = sim.jobs[jid]
+                if job.state != JobState.QUEUED:
+                    continue
+                self.schedule_job(sim, job)
         self._sleep_idle(sim)
 
     def on_epoch(self, sim, job: Job) -> None:
@@ -267,6 +300,16 @@ class EaCO:
 
     def _sleep_idle(self, sim) -> None:
         if not self.sleeps_idle_nodes:
+            return
+        fleet = getattr(sim, "fleet", None)
+        if fleet is not None:
+            # the ON-and-idle set, directly; sorted() both restores the old
+            # full-scan visit order (ascending id) and copies the set before
+            # the state writes mutate it
+            for nid in sorted(fleet.on_idle):
+                node = sim.nodes[nid]
+                node.account_energy(sim.now, sim.jobs, sim.power)
+                node.state = NodeState.SLEEP
             return
         for node in sim.nodes:
             if node.state == NodeState.ON and node.is_idle():

@@ -78,10 +78,7 @@ class EaCOElastic(EaCO):
         Single forward pass (same argument as ``EaCO.try_schedule``):
         admission only consumes capacity, so re-scanning after a success
         cannot admit a job that already failed this pass."""
-        ids = list(sim.queue)
-        if self.queue_window:
-            ids = ids[: self.queue_window]
-        for jid in ids:
+        for jid in sim.queue.first_n(self.queue_window):
             job = sim.jobs[jid]
             if job.state != JobState.QUEUED or not job.profile.is_elastic:
                 continue

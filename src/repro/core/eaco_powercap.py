@@ -42,6 +42,11 @@ class EaCOPowerCap(EaCO):
     an optional cluster-wide power cap (``SimConfig.power_cap_w``)."""
 
     name = "eaco-powercap"
+    # the joint search budget below is *positional* (only the first
+    # ``candidate_limit`` ranked candidates get the full ladder scan), so
+    # collapsing same-class idle nodes would shift which candidates fall
+    # inside the budget — keep the full enumeration
+    idle_candidate_dedup = False
 
     def __init__(
         self,

@@ -1,0 +1,172 @@
+"""Differential + property locks for the columnar fleet state (ISSUE 7).
+
+The vectorized simulator core keeps a struct-of-arrays ``FleetState``
+(power / frequency / state-code columns plus idle/busy index sets) beside
+the per-node objects, and ``find_candidates`` reads it instead of scanning
+the fleet.  These tests pin the refactor to the scalar semantics it
+replaced:
+
+  * differential — replaying a paper-shaped trace and a model-family
+    (bridge-pool) trace, every ``find_candidates`` call must equal the
+    ``find_candidates_reference`` full scan exactly, the fleet index
+    sets/columns must match the per-node ground truth, and the columnar
+    fleet power must agree with the scalar per-node summation to 1e-9;
+  * property — on randomized fleets/traces, the vectorized energy
+    settlement (``Simulator.account_all``) must agree with the scalar
+    ``node.current_power_w`` x dt settlement it replaced to 1e-9.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.eaco as eaco_mod
+from repro.cluster.power import fleet_skus
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import (
+    ProductionTraceConfig,
+    TraceConfig,
+    generate_production_trace,
+    generate_trace,
+    load_into,
+)
+from repro.core.candidates import find_candidates, find_candidates_reference
+from repro.core.eaco import EaCO
+
+
+class _DifferentialHarness:
+    """Patch ``EaCO``'s ``find_candidates`` to cross-check every call
+    against the reference scan and the fleet's consistency invariants."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def __enter__(self):
+        self._orig = eaco_mod.find_candidates
+
+        def checked(sim, job, thresholds, allow_sleeping=True, width=None,
+                    dedup_idle=False):
+            self.calls += 1
+            ref = find_candidates_reference(
+                sim, job, thresholds, allow_sleeping, width
+            )
+            fast = find_candidates(
+                sim, job, thresholds, allow_sleeping, width, dedup_idle=False
+            )
+            assert fast == ref, (
+                f"columnar candidates diverged from reference scan for "
+                f"job {job.id}: {fast} != {ref}"
+            )
+            sim.fleet.check_consistency()
+            # columnar power vs the scalar per-node summation (<= 1e-9)
+            scalar = sum(
+                n.current_power_w(sim.jobs, sim.power) for n in sim.nodes
+            )
+            assert abs(sim.fleet_power_w() - scalar) <= 1e-9
+            return self._orig(
+                sim, job, thresholds, allow_sleeping, width, dedup_idle
+            )
+
+        eaco_mod.find_candidates = checked
+        return self
+
+    def __exit__(self, *exc):
+        eaco_mod.find_candidates = self._orig
+
+
+def _replay(trace, n_nodes=12, node_skus=None):
+    sim = Simulator(
+        SimConfig(n_nodes=n_nodes, seed=0, node_skus=node_skus),
+        EaCO(queue_window=16),
+    )
+    load_into(sim, trace)
+    sim.run(until=500_000)
+    return sim
+
+
+def test_differential_paper_trace():
+    """100-job paper-shaped trace: columnar candidates == reference scan
+    at every scheduling decision, on a heterogeneous fleet."""
+    trace = generate_trace(TraceConfig(n_jobs=100, seed=7))
+    with _DifferentialHarness() as h:
+        sim = _replay(
+            trace,
+            n_nodes=12,
+            node_skus=fleet_skus(12, (("v100", 0.5), ("a100", 0.5))),
+        )
+    assert h.calls > 100  # retries re-enter the scheduler
+    assert sim.results()["jobs_done"] == 100
+    sim.fleet.check_consistency()
+
+
+def test_differential_family_trace():
+    """60-job model-family (bridge-pool) production trace: same lock,
+    exercising per-family SKU speeds and co-location churn."""
+    trace = generate_production_trace(
+        ProductionTraceConfig(n_jobs=60, seed=3, mix="bridge")
+    )
+    with _DifferentialHarness() as h:
+        sim = _replay(
+            trace,
+            n_nodes=8,
+            node_skus=fleet_skus(8, (("v100", 0.5), ("a100", 0.5))),
+        )
+    assert h.calls >= 60
+    assert sim.results()["jobs_done"] == 60
+    sim.fleet.check_consistency()
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(
+    seed=st.integers(0, 1000),
+    n_jobs=st.integers(5, 25),
+    n_nodes=st.integers(2, 10),
+    horizon=st.floats(0.5, 40.0),
+)
+def test_power_settlement_property(seed, n_jobs, n_nodes, horizon):
+    """Vectorized ``account_all`` == scalar power x dt settlement on random
+    fleets, mid-replay (to 1e-9, in practice bit-identical)."""
+    skus = (
+        fleet_skus(n_nodes, (("v100", 0.5), ("a100", 0.5)))
+        if seed % 2
+        else None
+    )
+    sim = Simulator(
+        SimConfig(n_nodes=n_nodes, seed=seed, node_skus=skus),
+        EaCO(queue_window=8),
+    )
+    trace = generate_trace(TraceConfig(n_jobs=n_jobs, seed=seed))
+    load_into(sim, trace)
+    sim.run(until=horizon)
+    # scalar expectation, computed from per-node state before settlement
+    expected = {}
+    for n in sim.nodes:
+        dt = sim.now - n.last_account_time
+        kwh = (
+            n.current_power_w(sim.jobs, sim.power) * dt / 1000.0
+            if dt > 0
+            else 0.0
+        )
+        expected[n.id] = n.energy_kwh + kwh
+    sim.account_all()
+    for n in sim.nodes:
+        assert math.isfinite(n.energy_kwh) and n.energy_kwh >= 0.0
+        assert abs(n.energy_kwh - expected[n.id]) <= 1e-9, (
+            n.id, n.energy_kwh, expected[n.id]
+        )
+        assert n.last_account_time == sim.now
+    # and the settled run keeps the fleet columns consistent
+    sim.fleet.check_consistency()
+
+
+def test_columnar_power_matches_scalar_after_full_run():
+    """End-of-run: the incremental dirty-set power column equals a fresh
+    scalar recomputation for every node."""
+    trace = generate_trace(TraceConfig(n_jobs=40, seed=11))
+    sim = _replay(trace, n_nodes=6)
+    sim.fleet_power_w()  # flush the dirty set
+    for n in sim.nodes:
+        assert abs(
+            sim.fleet.power[n.id] - n.current_power_w(sim.jobs, sim.power)
+        ) <= 1e-9

@@ -31,7 +31,10 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import bench_meta, check_regression, trace_signature
+from benchmarks.common import (
+    BENCH_SCHEMA_VERSION, bench_context, bench_meta, check_regression,
+    trace_signature,
+)
 from repro.cluster.simulator import SimConfig, Simulator
 from repro.cluster.trace import TraceConfig, generate_trace, load_into
 from repro.core.baselines import FIFO, FIFOPacked, Gandiva
@@ -290,10 +293,25 @@ def test_trace_signature_deterministic_and_sensitive():
     assert trace_signature(t1) == trace_signature(t2)
     assert trace_signature(t1) != trace_signature(t3)
     meta = bench_meta(t1, fleet={"n_nodes": 4}, extra_knob=7)
-    assert meta["schema_version"] == 1
+    assert meta["schema_version"] == BENCH_SCHEMA_VERSION
     assert meta["trace_signature"] == trace_signature(t1)
     assert meta["extra_knob"] == 7
     assert "timestamp" not in meta  # env-driven only: artifacts stay deterministic
+
+
+def test_bench_context_reads_both_schema_versions():
+    # v2: context only in meta; v1: duplicated at the payload top level
+    v2 = {"meta": {"schema_version": 2, "n_jobs": 10, "fleet": {"n_nodes": 4}}}
+    v1 = {
+        "meta": {"schema_version": 1, "n_jobs": 10},
+        "queue_window": 64,
+        "trace": {"n_jobs": 10},
+    }
+    assert bench_context(v2, "n_jobs") == 10
+    assert bench_context(v2, "fleet") == {"n_nodes": 4}
+    assert bench_context(v1, "n_jobs") == 10  # meta wins
+    assert bench_context(v1, "queue_window") == 64  # v1 top level
+    assert bench_context(v1, "fleet", "absent") == "absent"
 
 
 def test_check_regression_flags_shared_metric_drift():
