@@ -1,0 +1,301 @@
+"""Mixed training + inference-serving replay benchmark (repro.serve).
+
+Replays one diurnal "day": a 10k-job Philly-style training trace PLUS a
+1M-request inference stream (Zipf model popularity, bursty diurnal
+arrivals) on the same heterogeneous 96-node V100/A100 fleet under EaCO,
+with the serving autoscaler harvesting co-location headroom.  The
+comparison point is the classic *static split* of the same capacity:
+``96 - k`` train-only nodes plus a ``k``-node dedicated serving fleet
+(``k`` sized from the co-located run's replica peak), each running the
+identical workload.
+
+Headline claim (EaCO's resource-sharing thesis extended to inference):
+the co-located fleet serves the same requests within the same SLOs for
+less total energy than the split, because replicas ride the marginal
+power of already-busy training nodes instead of keeping dedicated nodes
+powered through the diurnal trough.
+
+Records wall-clock, request p50/p99, SLO violations and per-workload
+energy to ``benchmarks/artifacts/serve_bench.json`` and the repo-root
+``BENCH_serve.json`` trajectory file.
+
+``--smoke`` runs a minutes-long miniature (400 jobs / 30k requests / 16
+nodes) for the fast CI tier: same code paths, artifact only, no BENCH
+file, no energy gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks.common import Row, bench_meta, save_json, write_bench
+from repro.cluster.job import lm_profiles, paper_profiles
+from repro.cluster.power import fleet_skus
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.cluster.trace import (
+    ProductionTraceConfig,
+    RequestStreamConfig,
+    generate_production_trace,
+    generate_request_stream,
+    load_into,
+)
+from repro.core.eaco import EaCO
+from repro.serve import ServeConfig, ServeManager, load_request_stream
+from repro.serve.models import serve_models_from_profiles
+
+N_JOBS = 10_000
+N_REQUESTS = 1_000_000
+N_NODES = 96
+SKU_MIX = (("v100", 0.5), ("a100", 0.5))
+QUEUE_WINDOW = 64
+SERVE_FAMILIES = ("lm-small", "lm-medium", "resnet50")
+DAY_H = 25.0  # request-stream span (hours) at the configured rate
+
+SMOKE_JOBS = 400
+SMOKE_REQUESTS = 30_000
+SMOKE_NODES = 16
+
+
+def _profile_pool():
+    pool = dict(paper_profiles())
+    pool.update(lm_profiles())
+    return pool
+
+
+def _serve_models() -> Tuple:
+    return tuple(
+        serve_models_from_profiles(
+            _profile_pool(), families=SERVE_FAMILIES
+        ).values()
+    )
+
+
+def _trace_cfg(n_jobs: int) -> ProductionTraceConfig:
+    # same shape as scale_bench: heavy-tailed durations, bursty sessions
+    return ProductionTraceConfig(
+        n_jobs=n_jobs,
+        seed=0,
+        arrival_rate_per_hour=40.0 * (n_jobs / N_JOBS),
+        duration_mu_ln_h=-0.5,
+        duration_sigma_ln_h=1.4,
+    )
+
+
+def _stream_cfg(n_requests: int) -> RequestStreamConfig:
+    return RequestStreamConfig(
+        n_requests=n_requests,
+        seed=0,
+        models=SERVE_FAMILIES,
+        rate_per_hour=n_requests / DAY_H,
+        diurnal=True,
+    )
+
+
+def _summarize(sim, wall_s: float) -> Dict:
+    r = sim.results()
+    out = {
+        "wall_s": round(wall_s, 2),
+        "events": sim.events_processed,
+        "jobs_done": r["jobs_done"],
+        "jobs_total": r["jobs_total"],
+        "total_energy_kwh": round(r["total_energy_kwh"], 1),
+        "train_job_energy_kwh": round(r["job_energy_kwh"], 1),
+        "avg_jct_h": round(r["avg_jct_h"], 3),
+        "makespan_h": round(r["makespan_h"], 1),
+        "avg_active_nodes": round(r["avg_active_nodes"], 2),
+        "deadline_violations": r["deadline_violations"],
+    }
+    if "serve" in r:
+        s = r["serve"]
+        out["serve"] = {
+            "requests_total": s["requests_total"],
+            "served_total": s["served_total"],
+            "dropped_requests": s["dropped_requests"],
+            "slo_violations": round(s["slo_violations"], 1),
+            "p50_ms": round(s["p50_ms"], 1),
+            "p99_ms": round(s["p99_ms"], 1),
+            "serve_energy_kwh": round(s["serve_energy_kwh"], 1),
+            "replicas_peak": s["replicas_peak"],
+            "replica_hours": round(s["replica_hours"], 1),
+            "scale_up_count": s["scale_up_count"],
+            "scale_down_count": s["scale_down_count"],
+            "evict_count": s["evict_count"],
+            "per_model": {
+                fam: {
+                    "p50_ms": round(m["p50_ms"], 1),
+                    "p99_ms": round(m["p99_ms"], 1),
+                    "slo_s": m["slo_s"],
+                    "slo_violations": round(m["slo_violations"], 1),
+                }
+                for fam, m in s["per_model"].items()
+            },
+        }
+    return out
+
+
+def _run_colocated(trace, stream, n_nodes: int) -> Dict:
+    sim = Simulator(
+        SimConfig(
+            n_nodes=n_nodes, seed=0, node_skus=fleet_skus(n_nodes, SKU_MIX)
+        ),
+        EaCO(queue_window=QUEUE_WINDOW),
+    )
+    load_into(sim, trace)
+    ServeManager(ServeConfig(models=_serve_models())).attach(sim)
+    load_request_stream(sim, stream)
+    t0 = time.perf_counter()
+    sim.run(until=1_000_000)
+    return _summarize(sim, time.perf_counter() - t0)
+
+
+def _run_split(trace, stream, n_nodes: int, serve_nodes: int) -> Dict:
+    """The same workload on statically partitioned capacity: train-only on
+    ``n_nodes - serve_nodes`` nodes, a dedicated ``serve_nodes``-node
+    serving fleet (same autoscaler, no training to share with)."""
+    skus = fleet_skus(n_nodes, SKU_MIX)
+    train_sim = Simulator(
+        SimConfig(
+            n_nodes=n_nodes - serve_nodes,
+            seed=0,
+            node_skus=skus[: n_nodes - serve_nodes],
+        ),
+        EaCO(queue_window=QUEUE_WINDOW),
+    )
+    load_into(train_sim, trace)
+    serve_sim = Simulator(
+        SimConfig(
+            n_nodes=serve_nodes, seed=0, node_skus=skus[n_nodes - serve_nodes:]
+        ),
+        EaCO(queue_window=QUEUE_WINDOW),
+    )
+    ServeManager(ServeConfig(models=_serve_models())).attach(serve_sim)
+    load_request_stream(serve_sim, stream)
+    t0 = time.perf_counter()
+    train_sim.run(until=1_000_000)
+    serve_sim.run(until=1_000_000)
+    wall_s = time.perf_counter() - t0
+    train = _summarize(train_sim, wall_s)
+    serve = _summarize(serve_sim, 0.0)
+    return {
+        "train_nodes": n_nodes - serve_nodes,
+        "serve_nodes": serve_nodes,
+        "wall_s": round(wall_s, 2),
+        "total_energy_kwh": round(
+            train_sim.results()["total_energy_kwh"]
+            + serve_sim.results()["total_energy_kwh"],
+            1,
+        ),
+        "train": train,
+        "serve_fleet": serve,
+    }
+
+
+def _run_pair(n_jobs: int, n_requests: int, n_nodes: int) -> Dict:
+    t0 = time.perf_counter()
+    trace = generate_production_trace(_trace_cfg(n_jobs))
+    stream = generate_request_stream(_stream_cfg(n_requests))
+    gen_s = time.perf_counter() - t0
+
+    colocated = _run_colocated(trace, stream, n_nodes)
+    # equal-capacity split: the dedicated fleet gets as many whole nodes
+    # as the co-located run's replica peak occupied at one GPU per replica
+    gpus = SimConfig().gpus_per_node
+    serve_nodes = max(1, math.ceil(colocated["serve"]["replicas_peak"] / gpus))
+    split = _run_split(trace, stream, n_nodes, serve_nodes)
+
+    saving = split["total_energy_kwh"] - colocated["total_energy_kwh"]
+    return {
+        "trace": {"seed": 0, "generator": "philly_style_production",
+                  "gen_s": round(gen_s, 2)},
+        "stream": {
+            "n_requests": n_requests,
+            "models": list(SERVE_FAMILIES),
+            "rate_per_hour": n_requests / DAY_H,
+        },
+        "results": {
+            "colocated": colocated,
+            "split": split,
+            "split_minus_colocated_kwh": round(saving, 1),
+            "colocated_beats_split": saving > 0,
+        },
+        "_trace_obj": trace,  # stripped before serialization
+    }
+
+
+def run() -> List[Row]:
+    payload = _run_pair(N_JOBS, N_REQUESTS, N_NODES)
+    trace = payload.pop("_trace_obj")
+    meta = bench_meta(
+        trace,
+        fleet={"n_nodes": N_NODES, "sku_mix": [list(m) for m in SKU_MIX]},
+        queue_window=QUEUE_WINDOW,
+        n_requests=N_REQUESTS,
+    )
+    save_json("serve_bench.json", {"meta": meta, **payload})
+    write_bench("serve", payload, meta)
+
+    res = payload["results"]
+    co, sp = res["colocated"], res["split"]
+    s = co["serve"]
+    rows = [
+        Row(
+            "serve/colocated_10k_1m",
+            co["wall_s"] * 1e6,
+            f"wall={co['wall_s']}s energy={co['total_energy_kwh']}kWh "
+            f"p50={s['p50_ms']}ms p99={s['p99_ms']}ms "
+            f"slo_viol={s['slo_violations']} "
+            f"served={s['served_total']}/{s['requests_total']} "
+            f"replicas_peak={s['replicas_peak']}",
+        ),
+        Row(
+            "serve/split_comparison",
+            sp["wall_s"] * 1e6,
+            f"split={sp['total_energy_kwh']}kWh "
+            f"({sp['train_nodes']}+{sp['serve_nodes']} nodes) vs "
+            f"colocated={co['total_energy_kwh']}kWh "
+            f"saving={res['split_minus_colocated_kwh']}kWh "
+            f"beats={res['colocated_beats_split']}",
+        ),
+    ]
+    if not res["colocated_beats_split"]:  # nightly gate (artifacts written)
+        raise RuntimeError(
+            f"co-located serving burned more energy than the static split "
+            f"({co['total_energy_kwh']} vs {sp['total_energy_kwh']} kWh)"
+        )
+    return rows
+
+
+def run_smoke() -> List[Row]:
+    """Fast-tier miniature: same code paths, artifact only, no gate."""
+    payload = _run_pair(SMOKE_JOBS, SMOKE_REQUESTS, SMOKE_NODES)
+    payload.pop("_trace_obj")
+    save_json("serve_bench_smoke.json", payload)
+    res = payload["results"]
+    co, s = res["colocated"], res["colocated"]["serve"]
+    return [
+        Row(
+            "serve/smoke",
+            co["wall_s"] * 1e6,
+            f"wall={co['wall_s']}s served={s['served_total']}"
+            f"/{s['requests_total']} p99={s['p99_ms']}ms "
+            f"split-colocated={res['split_minus_colocated_kwh']}kWh",
+        )
+    ]
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="minutes-long miniature for the fast CI tier (no BENCH file)",
+    )
+    args = ap.parse_args(argv)
+    for r in run_smoke() if args.smoke else run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -155,9 +155,19 @@ class PowerCapEnforcer:
         """Min SLO slack (hours) over the node's residents at their current
         rates; +inf when no resident carries a finite deadline.  The
         ordering key: throttle max-slack nodes first, raise min-slack
-        nodes first."""
+        nodes first.
+
+        Serving replicas (``repro.serve``) carry no deadline but do carry
+        a latency SLO: their slack is the seconds of extra latency they
+        can absorb before violating it (in hours) — so a node hosting a
+        loaded replica is raised early and throttled last, instead of
+        looking infinitely slack."""
         slack = math.inf
+        serve = getattr(sim, "serve", None)
         for jid in node.resident_job_ids():
+            if serve is not None and jid in serve.replicas:
+                slack = min(slack, serve.replica_slack_h(sim, jid))
+                continue
             job = sim.jobs[jid]
             if not math.isfinite(job.deadline):
                 continue

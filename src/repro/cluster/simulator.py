@@ -161,6 +161,14 @@ class Simulator:
         self.power_cap = (
             dvfs.PowerCapEnforcer(cfg.power_cap_w) if cfg.power_cap_w > 0 else None
         )
+        # serving manager attach point (repro.serve): ``None`` when absent
+        # OR disabled — the same one-check contract as ``telemetry``.
+        # Serving-replica pseudo-jobs live in ``self.jobs`` (so placement,
+        # co-location pricing and energy attribution are shared code) but
+        # are excluded from training metrics and the epoch machinery.
+        self.serve = None
+        self._serve_ids: Set[int] = set()
+        self._serve_done = 0
         # event dispatch table (kind -> bound handler): collected from every
         # ``_ev_<kind>`` method so subclass handlers register automatically;
         # run() falls back to getattr for kinds pushed after construction
@@ -220,7 +228,12 @@ class Simulator:
         jobs = self.jobs
         rates = self._rate
         residents_on = node.residents_on
+        serve_ids = self._serve_ids
         for jid in node.resident_job_ids():
+            if jid in serve_ids:
+                # replicas have no training rate or epoch events; their
+                # profiles still inflate co-residents via residents_on
+                continue
             job = jobs[jid]
             self._advance_progress(job)
             infl = self.true_inflation(
@@ -611,6 +624,53 @@ class Simulator:
         self.push(arrival, "arrival", {"job": job.id})
         return job
 
+    # ---------------------------------------------------------------- serving
+
+    def register_serve_job(self, profile: JobProfile) -> Job:
+        """Register a serving-replica pseudo-job (``repro.serve``): a
+        deadline-free job the manager places through ``allocate`` like any
+        other, but which the simulator never rates, epochs or counts in
+        training metrics.  No arrival event — the manager owns its
+        lifecycle."""
+        job = Job(
+            id=len(self.jobs), profile=profile, arrival=self.now,
+            deadline=math.inf,
+        )
+        self.jobs[job.id] = job
+        self._serve_ids.add(job.id)
+        return job
+
+    def retire_serve_job(self, job: Job) -> None:
+        """Mark a drained/evicted replica done (replicas bypass
+        ``_complete`` — they carry no completion statistics)."""
+        job.state = JobState.DONE
+        job.finish_time = self.now
+        self._done_count += 1
+        self._serve_done += 1
+
+    def _ev_request_batch(self, payload):
+        """One inference arrival burst ``(family, n)``.  Pure accounting:
+        the manager routes and folds latency without touching allocation
+        state, so the event never marks the scheduler or power dirty —
+        coalescing-contract-safe by construction."""
+        if self.serve is None:
+            raise RuntimeError(
+                "request_batch event with no serving manager attached "
+                "(load_request_stream requires ServeManager.attach first)"
+            )
+        self.serve.on_request_batch(self, payload)
+
+    def _ev_serve_scale(self, _):
+        """Periodic autoscaler tick (no-op if the manager detached)."""
+        if self.serve is not None:
+            self.serve.on_scale(self)
+
+    def _serving_active(self) -> bool:
+        """Whether the run loop must keep going for serving work even
+        after every registered job is done (e.g. a serve-only replay
+        between replica generations)."""
+        return self.serve is not None and self.serve.active()
+
     def run(self, until: Optional[float] = None) -> None:
         """Drain events (up to ``until``, exclusive of later events) — the
         main loop: dispatch, re-schedule when allocation state moved,
@@ -633,7 +693,7 @@ class Simulator:
         dispatch = self._dispatch
         jobs = self.jobs
         while heap:
-            if jobs and self._done_count == len(jobs):
+            if jobs and self._done_count == len(jobs) and not self._serving_active():
                 # everything already finished (e.g. a run() call after a
                 # pause landed past the last completion): leave trailing
                 # bookkeeping events unprocessed, exactly as the in-loop
@@ -663,7 +723,10 @@ class Simulator:
                 if (
                     not heap
                     or heap[0][0] != t
-                    or self._done_count == len(jobs)
+                    or (
+                        self._done_count == len(jobs)
+                        and not self._serving_active()
+                    )
                 ):
                     break
             # reschedule only when allocation-relevant state changed — epoch
@@ -695,7 +758,7 @@ class Simulator:
                     self.peak_fleet_power_w = p
                 if tel is not None:
                     tel.fleet_power_sample(self.now, p)
-            if self._done_count == len(jobs):
+            if self._done_count == len(jobs) and not self._serving_active():
                 break
         self.account_all()
 
@@ -734,7 +797,7 @@ class Simulator:
                         n.node_util(self.jobs), n.node_mem_util(), n.freq,
                         n.state,
                     )
-        if self._done_count < len(self.jobs):
+        if self._done_count < len(self.jobs) or self._serving_active():
             self.push(self.now + self.cfg.active_node_sample_hours, "sample", None)
 
     def _ev_arrival(self, payload):
@@ -806,6 +869,11 @@ class Simulator:
         self._account_node(node)
         victims = [self.jobs[i] for i in node.resident_job_ids()]
         for job in victims:
+            if job.id in self._serve_ids:
+                # replicas die with the node: their traffic re-pends and
+                # the autoscaler re-provisions on its next tick
+                self.serve.on_replica_failure(self, job)
+                continue
             # involuntary undo: resume from the last epoch checkpoint
             self.deallocate(job, to_queue=True, checkpoint=True, reason="failure")
             job.restart_count += 1
@@ -843,11 +911,19 @@ class Simulator:
         # completion time; the single remaining pass over the job table only
         # folds static per-job counters (schedulers bump them in place) and
         # runs once per results() call, not once per event.
-        n_done = self._done_count
+        # serving pseudo-jobs are excluded from every training metric (the
+        # set is empty — and the checks free — when serving is off; the
+        # byte-identity test locks disabled == absent); per-request serving
+        # metrics live under the "serve" key, present only when a manager
+        # is attached
+        n_done = self._done_count - self._serve_done
+        serve_ids = self._serve_ids
         total_e = sum(n.energy_kwh for n in self.nodes)
         undo = restart = resize = 0
         job_e = 0.0
         for j in self.jobs.values():
+            if j.id in serve_ids:
+                continue
             undo += j.undo_count
             restart += j.restart_count
             resize += j.resize_count
@@ -855,7 +931,7 @@ class Simulator:
         out = {
             "total_energy_kwh": total_e,
             "jobs_done": n_done,
-            "jobs_total": len(self.jobs),
+            "jobs_total": len(self.jobs) - len(serve_ids),
             "avg_jct_h": self._jct_sum / n_done if n_done else 0.0,
             "avg_jtt_h": self._jtt_sum / n_done if n_done else 0.0,
             "avg_wait_h": self._wait_sum / n_done if n_done else 0.0,
@@ -886,4 +962,7 @@ class Simulator:
         # dict stays byte-identical for every non-profiling run
         if self.telemetry is not None and self.telemetry.profiler is not None:
             out["profile"] = self.telemetry.profiler.summary()
+        # present ONLY when a serving manager is attached (same contract)
+        if self.serve is not None:
+            out["serve"] = self.serve.summary()
         return out

@@ -265,7 +265,10 @@ def generate_production_trace(
     while len(out) < cfg.n_jobs:
         t_burst = _next_arrival(rng, burst_cfg, t_burst)
         tenant = int(rng.choice(cfg.n_tenants, p=tenant_w))
-        n_in_burst = 1 + int(rng.geometric(1.0 / cfg.burst_size_mean))
+        # numpy's geometric is supported on {1, 2, ...} with mean 1/p, so
+        # p = 1/burst_size_mean realizes the documented mean exactly (the
+        # old ``1 + geometric`` draw was off by one: mean burst_size_mean+1)
+        n_in_burst = int(rng.geometric(1.0 / cfg.burst_size_mean))
         t = t_burst
         for _ in range(n_in_burst):
             if len(out) >= cfg.n_jobs:
@@ -332,6 +335,99 @@ def generate_production_trace(
             t += float(rng.exponential(cfg.burst_gap_h))
     out.sort(key=lambda e: e[1])
     return out[: cfg.n_jobs]
+
+
+# ------------------------------------------------------- inference requests
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStreamConfig:
+    """Online-inference request stream knobs (``repro.serve`` workload).
+
+    Requests arrive in bursts (a burst ~ one upstream client batch or a
+    traffic spike): burst *starts* follow the same non-homogeneous Poisson
+    process as job arrivals (``_next_arrival``, diurnal day/night
+    intensity), burst *sizes* are geometric with mean ``burst_size_mean``,
+    and each burst targets one model drawn from a Zipf popularity law over
+    ``models`` (rank 1 = most popular).  The stream is a plain
+    ``[(model_name, arrival_h, n_requests)]`` list and round-trips through
+    CSV (``request_stream_to_csv`` / ``request_stream_from_csv``).
+    """
+
+    n_requests: int = 100_000
+    seed: int = 0
+    # served model families, popularity rank order (Zipf weight 1/rank^a)
+    models: Tuple[str, ...] = ("lm-small", "lm-medium", "resnet50")
+    zipf_a: float = 1.1
+    rate_per_hour: float = 40_000.0  # fleet-wide mean request rate
+    burst_size_mean: float = 20.0  # mean requests per burst (geometric)
+    diurnal: bool = True
+
+
+def _model_weights(cfg: RequestStreamConfig) -> np.ndarray:
+    w = 1.0 / np.arange(1, len(cfg.models) + 1, dtype=float) ** cfg.zipf_a
+    return w / w.sum()
+
+
+def generate_request_stream(
+    cfg: RequestStreamConfig,
+) -> List[Tuple[str, float, int]]:
+    """Returns [(model_name, arrival_h, n_requests)], arrival-sorted.
+
+    Exactly ``cfg.n_requests`` requests are emitted (the final burst is
+    truncated), so replays are request-count-comparable across configs.
+    """
+    if not cfg.models:
+        raise ValueError("RequestStreamConfig.models must name >= 1 family")
+    rng = np.random.Generator(np.random.PCG64(cfg.seed))
+    model_w = _model_weights(cfg)
+    # burst starts arrive at rate/mean-size; reuse the thinning sampler
+    burst_cfg = TraceConfig(
+        arrival_rate_per_hour=cfg.rate_per_hour / cfg.burst_size_mean,
+        diurnal=cfg.diurnal,
+    )
+    out: List[Tuple[str, float, int]] = []
+    t = 0.0
+    left = cfg.n_requests
+    while left > 0:
+        t = _next_arrival(rng, burst_cfg, t)
+        model = cfg.models[int(rng.choice(len(cfg.models), p=model_w))]
+        n = min(int(rng.geometric(1.0 / cfg.burst_size_mean)), left)
+        out.append((model, t, n))
+        left -= n
+    return out
+
+
+REQUEST_CSV_FIELDS = ("model", "arrival_h", "n_requests")
+
+
+def request_stream_to_csv(
+    stream: Sequence[Tuple[str, float, int]], path: str
+) -> None:
+    """Write a request stream in the replayable CSV schema (docs/traces.md)."""
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(REQUEST_CSV_FIELDS)
+        for model, arrival, n in stream:
+            w.writerow([model, repr(arrival), n])
+
+
+def request_stream_from_csv(path: str) -> List[Tuple[str, float, int]]:
+    """Load a request stream written by ``request_stream_to_csv`` (or any
+    external stream mapped onto the same 3-column schema)."""
+    out: List[Tuple[str, float, int]] = []
+    with open(path, newline="") as f:
+        reader = csv.DictReader(f)
+        missing = set(REQUEST_CSV_FIELDS) - set(reader.fieldnames or ())
+        if missing:
+            raise ValueError(
+                f"request CSV {path} missing columns: {sorted(missing)}"
+            )
+        for row in reader:
+            out.append(
+                (row["model"], float(row["arrival_h"]), int(row["n_requests"]))
+            )
+    return out
 
 
 # ----------------------------------------------------------------- CSV I/O

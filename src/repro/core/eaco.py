@@ -227,11 +227,19 @@ class EaCO:
         # cannot succeed later in it — the old restart-on-progress loop
         # re-scanned the whole queue O(q) times for identical decisions.
         if sim.queue:
+            unplaced = 0
             for jid in sim.queue.first_n(self.queue_window):
                 job = sim.jobs[jid]
                 if job.state != JobState.QUEUED:
                     continue
-                self.schedule_job(sim, job)
+                if not self.schedule_job(sim, job):
+                    unplaced += 1
+            serve = getattr(sim, "serve", None)
+            if unplaced and serve is not None:
+                # training starving while replicas hold capacity: signal
+                # the serving manager (it evicts at its next tick, so the
+                # freed GPUs re-enter placement inside a normal event step)
+                serve.on_training_pressure(sim, unplaced)
         self._sleep_idle(sim)
 
     def on_epoch(self, sim, job: Job) -> None:

@@ -23,6 +23,8 @@ Tables (see ``docs/observability.md`` for the full schema):
   ``cap_actions``  power-cap enforcer throttle / raise / infeasible events
   ``plans``        elastic-controller resize plans (issued and rejected)
   ``brain_rounds`` Brain proposal-round summaries
+  ``serve``        serving events: routed batches, autoscaler scale
+                   up/down, evictions, drains, shed traffic
 """
 
 from __future__ import annotations
@@ -138,6 +140,7 @@ class TelemetryHub:
         self.brain_rounds = ColumnTable(
             ("t", "considered", "proposed", "best_saving_kwh")
         )
+        self.serve = ColumnTable(("t", "kind", "model", "node_id", "value"))
         self.audit: Optional[DecisionAudit] = (
             DecisionAudit() if self.cfg.audit else None
         )
@@ -227,6 +230,15 @@ class TelemetryHub:
         """Append one Brain proposal-round summary."""
         self.brain_rounds.append(t, considered, proposed, best_saving_kwh)
 
+    def serve_event(
+        self, t: float, kind: str, model: str, node_id: int, value: float
+    ) -> None:
+        """Append one serving event: ``batch`` (value = requests routed),
+        ``scale_up`` / ``scale_down`` / ``evict`` / ``drain`` / ``failure``
+        (value = replica pseudo-job id) or ``drop`` (value = requests
+        shed; ``node_id=-1`` for fleet-wide events)."""
+        self.serve.append(t, kind, model, node_id, value)
+
     # ------------------------------------------------------------- reading
 
     def tables(self) -> Dict[str, ColumnTable]:
@@ -240,6 +252,7 @@ class TelemetryHub:
             "cap_actions": self.cap_actions,
             "plans": self.plans,
             "brain_rounds": self.brain_rounds,
+            "serve": self.serve,
         }
         if self.audit is not None:
             out["decisions"] = self.audit.decisions

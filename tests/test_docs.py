@@ -28,6 +28,7 @@ PACKAGES = (
     "repro.elastic",
     "repro.bridge",
     "repro.obs",
+    "repro.serve",
 )
 
 # names that look public but are inherited machinery / trivially documented

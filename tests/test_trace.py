@@ -301,3 +301,114 @@ def test_csv_trace_replays_identically(tmp_path):
         return sim.results()
 
     assert run(trace_from_csv(path)) == run(trace)
+
+
+# ---------------------------------------------- deadline-tier normalization
+
+
+def test_non_normalized_deadline_tiers_accepted_everywhere():
+    """Regression (ISSUE 8): tier probabilities are weights, not
+    probabilities — both generators must normalize them rather than let
+    np.random.choice reject p that doesn't sum to 1."""
+    tiers = ((2.0, 1.15), (5.0, 2.0), (3.0, math.inf))  # sums to 10
+
+    def proportions(trace):
+        n = len(trace)
+        no_slo = tight = relaxed = 0
+        for prof, t, d in trace:
+            if not math.isfinite(d):
+                no_slo += 1
+            elif abs((d - t) / prof.base_jct_hours - 1.15) < 1e-6:
+                tight += 1
+            else:
+                relaxed += 1
+        return tight / n, relaxed / n, no_slo / n
+
+    legacy = generate_trace(
+        TraceConfig(n_jobs=4000, seed=0, deadline_tiers=tiers)
+    )
+    # failure_frac=0: retried attempts carry deadline=inf and shifted
+    # arrivals, which would blur the exact slack classification below
+    prod = _production(n_jobs=4000, seed=0, deadline_tiers=tiers, failure_frac=0.0)
+    for trace in (legacy, prod):
+        tight, relaxed, no_slo = proportions(trace)
+        assert abs(tight - 0.2) < 0.03
+        assert abs(relaxed - 0.5) < 0.03
+        assert abs(no_slo - 0.3) < 0.03
+
+
+def test_production_burst_size_mean_not_off_by_one():
+    """Regression (ISSUE 8): the geometric burst-size draw was ``1 +
+    geometric`` (mean ``burst_size_mean + 1``), inflating the realized
+    arrival rate ~12.5% at the default mean of 8.  With diurnal off, the
+    realized rate must match the configured rate well inside that gap."""
+    n_jobs = 20_000
+    # failure_frac=0: retry attempts are extra trace entries on top of the
+    # configured logical-job rate and would bias the estimate upward
+    trace = _production(
+        n_jobs=n_jobs, seed=3, diurnal=False, arrival_rate_per_hour=60.0,
+        failure_frac=0.0,
+    )
+    span_h = trace[-1][1] - trace[0][1]
+    realized = n_jobs / span_h
+    assert abs(realized - 60.0) / 60.0 < 0.06
+
+
+# ------------------------------------------------------- request streams
+
+
+def _stream(**kw):
+    from repro.cluster.trace import RequestStreamConfig, generate_request_stream
+
+    return generate_request_stream(RequestStreamConfig(**kw))
+
+
+def test_request_stream_deterministic_sorted_exact_count():
+    a = _stream(n_requests=5000, seed=9)
+    b = _stream(n_requests=5000, seed=9)
+    assert a == b
+    assert sum(n for _, _, n in a) == 5000
+    assert all(n >= 1 for _, _, n in a)
+    times = [t for _, t, _ in a]
+    assert all(tb >= ta for ta, tb in zip(times, times[1:]))
+    assert _stream(n_requests=5000, seed=10) != a
+
+
+def test_request_stream_burst_size_mean_matches_config():
+    """Burst sizes are directly observable here: their mean must realize
+    ``burst_size_mean`` (the off-by-one draw would sit at mean + 1)."""
+    stream = _stream(n_requests=100_000, seed=1, burst_size_mean=20.0)
+    sizes = [n for _, _, n in stream[:-1]]  # last burst is truncated
+    mean = sum(sizes) / len(sizes)
+    assert abs(mean - 20.0) / 20.0 < 0.05
+
+
+def test_request_stream_zipf_popularity_ordering():
+    stream = _stream(n_requests=50_000, seed=2, zipf_a=1.1)
+    by_model = {}
+    for m, _, n in stream:
+        by_model[m] = by_model.get(m, 0) + n
+    # rank order of RequestStreamConfig.models is the popularity order
+    assert by_model["lm-small"] > by_model["lm-medium"] > by_model["resnet50"]
+
+
+def test_request_stream_csv_roundtrip(tmp_path):
+    from repro.cluster.trace import (
+        request_stream_from_csv,
+        request_stream_to_csv,
+    )
+
+    stream = _stream(n_requests=2000, seed=4)
+    path = str(tmp_path / "req.csv")
+    request_stream_to_csv(stream, path)
+    assert request_stream_from_csv(path) == stream
+
+
+def test_request_stream_csv_rejects_missing_columns(tmp_path):
+    path = str(tmp_path / "bad.csv")
+    with open(path, "w") as f:
+        f.write("model,arrival_h\nlm-small,0.5\n")
+    from repro.cluster.trace import request_stream_from_csv
+
+    with pytest.raises(ValueError, match="missing columns"):
+        request_stream_from_csv(path)
