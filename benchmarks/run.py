@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   scale    — 10k-job Philly-style replay on a heterogeneous V100/A100 fleet
   serve    — mixed day: 10k-job trace + 1M-request serving, co-located vs split
   dvfs     — EaCO vs EaCO-PowerCap at 3 cluster power-cap levels (10k jobs)
+  synergy  — host-aware vs host-blind EaCO on the 10k hetero trace (Synergy)
   roofline — §Roofline terms per (arch x shape x mesh) from the dry-run
   kernels  — Pallas kernel micro-benches + interpret-mode correctness
 
@@ -61,7 +62,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (
         dvfs_bench, elastic_bench, fig1, fig3, fig4, kernels_bench,
-        roofline_bench, scale_bench, serve_bench, table1, tpu_cluster,
+        roofline_bench, scale_bench, serve_bench, synergy_bench, table1,
+        tpu_cluster,
     )
 
     modules = [
@@ -74,6 +76,7 @@ def main() -> None:
         ("scale", scale_bench),
         ("serve", serve_bench),
         ("dvfs", dvfs_bench),
+        ("synergy", synergy_bench),
         ("roofline", roofline_bench),
         ("kernels", kernels_bench),
     ]

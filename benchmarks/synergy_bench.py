@@ -1,0 +1,164 @@
+"""Host-aware vs host-blind co-location benchmark (Synergy-style ablation).
+
+Replays the production 10k-job heterogeneous trace (the ``scale_bench``
+canon: Philly-style arrivals, V100/A100 96-node fleet) with Synergy-style
+host-resource demand attached to every family
+(``trace.attach_host_profiles``), under two EaCO configurations:
+
+  host_aware — EaCO prices host contention end to end: the Algorithm-2
+               host-feasibility gate, the host-extended rank key, and the
+               host-contention term in the analytic inflation fallback;
+  host_blind — the pre-host scheduler (``EaCO(host_aware=False)``): no
+               admission cap, the GPU-only rank key and analytic model —
+               but the simulated *world* still pays host contention, and
+               the observation windows still measure it (mispredict,
+               observe, undo — exactly how a blind production scheduler
+               limps along).
+
+A third ``host_off`` arm replays the same trace *without* host demand as
+the absent==disabled control: its shared metrics must match the committed
+``BENCH_scale.json`` EaCO row byte-for-byte.
+
+Acceptance gate (enforced on the full run): host-aware EaCO strictly
+dominates host-blind EaCO — fewer SLO (deadline) violations at equal or
+lower total energy.  ``--smoke`` runs a reduced slice for the fast CI
+tier (no BENCH file, no dominance gate: the gap is a fleet-scale effect).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row, bench_meta, save_json, write_bench
+from benchmarks.scale_bench import (
+    N_NODES,
+    QUEUE_WINDOW,
+    SKU_MIX,
+    TRACE,
+    _run_one,
+)
+from repro.cluster.trace import (
+    ProductionTraceConfig,
+    attach_host_profiles,
+    generate_production_trace,
+)
+from repro.core.eaco import EaCO
+
+SMOKE_N_JOBS = 600
+
+
+def _compare(results: Dict[str, Dict]) -> Dict:
+    """Dominance summary: host-aware vs host-blind on the host trace."""
+    aware, blind = results["host_aware"], results["host_blind"]
+    return {
+        "slo_violations_aware": aware["deadline_violations"],
+        "slo_violations_blind": blind["deadline_violations"],
+        "energy_aware_kwh": aware["total_energy_kwh"],
+        "energy_blind_kwh": blind["total_energy_kwh"],
+        "undo_aware": aware["undo_count"],
+        "undo_blind": blind["undo_count"],
+        "dominates": (
+            aware["deadline_violations"] < blind["deadline_violations"]
+            and aware["total_energy_kwh"] <= blind["total_energy_kwh"]
+        ),
+    }
+
+
+def _replay(host, base) -> Dict[str, Dict]:
+    return {
+        "host_aware": _run_one(EaCO(queue_window=QUEUE_WINDOW), host),
+        "host_blind": _run_one(
+            EaCO(queue_window=QUEUE_WINDOW, host_aware=False), host
+        ),
+        "host_off": _run_one(EaCO(queue_window=QUEUE_WINDOW), base),
+    }
+
+
+def run() -> List[Row]:
+    t0 = time.perf_counter()
+    base = generate_production_trace(TRACE)
+    host = attach_host_profiles(base)
+    results = _replay(host, base)
+    comparison = _compare(results)
+    payload = {
+        "trace": {
+            "seed": TRACE.seed,
+            "generator": "philly_style_production+host_profiles",
+        },
+        "results": results,
+        "comparison": comparison,
+    }
+    meta = bench_meta(
+        host,
+        fleet={"n_nodes": N_NODES, "sku_mix": [list(m) for m in SKU_MIX]},
+        queue_window=QUEUE_WINDOW,
+    )
+    save_json("synergy_bench.json", {"meta": meta, **payload})
+    write_bench("synergy", payload, meta)
+
+    a, b = results["host_aware"], results["host_blind"]
+    rows = [
+        Row(
+            "synergy/host_aware_vs_blind_10k",
+            (time.perf_counter() - t0) * 1e6,
+            f"slo_viol={a['deadline_violations']} vs {b['deadline_violations']} "
+            f"energy={a['total_energy_kwh']}kWh vs {b['total_energy_kwh']}kWh "
+            f"undo={a['undo_count']} vs {b['undo_count']} "
+            f"dominates={comparison['dominates']}",
+        )
+    ]
+    if not comparison["dominates"]:  # CI gate (artifacts are written first)
+        raise RuntimeError(
+            "host-aware EaCO failed to dominate host-blind EaCO: "
+            f"SLO violations {a['deadline_violations']} vs "
+            f"{b['deadline_violations']}, energy {a['total_energy_kwh']} vs "
+            f"{b['total_energy_kwh']} kWh"
+        )
+    return rows
+
+
+def run_smoke() -> List[Row]:
+    """Reduced slice for the fast CI tier: same fleet and trace shape at
+    ``SMOKE_N_JOBS`` jobs; exercises the full host pipeline but writes no
+    BENCH file and enforces no dominance gate (the SLO/energy gap is a
+    fleet-scale effect the short trace cannot resolve)."""
+    cfg = ProductionTraceConfig(
+        n_jobs=SMOKE_N_JOBS,
+        seed=TRACE.seed,
+        arrival_rate_per_hour=TRACE.arrival_rate_per_hour,
+        duration_mu_ln_h=TRACE.duration_mu_ln_h,
+        duration_sigma_ln_h=TRACE.duration_sigma_ln_h,
+    )
+    t0 = time.perf_counter()
+    base = generate_production_trace(cfg)
+    results = _replay(attach_host_profiles(base), base)
+    comparison = _compare(results)
+    save_json(
+        "synergy_smoke.json", {"results": results, "comparison": comparison}
+    )
+    a, b = results["host_aware"], results["host_blind"]
+    return [
+        Row(
+            f"synergy/smoke_{SMOKE_N_JOBS}",
+            (time.perf_counter() - t0) * 1e6,
+            f"slo_viol={a['deadline_violations']} vs {b['deadline_violations']} "
+            f"energy={a['total_energy_kwh']}kWh vs {b['total_energy_kwh']}kWh",
+        )
+    ]
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help=f"reduced {SMOKE_N_JOBS}-job slice (fast CI tier; no BENCH file)",
+    )
+    args = ap.parse_args(argv)
+    for r in run_smoke() if args.smoke else run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,4 +30,9 @@ from repro.bridge.calibrate import (  # noqa: F401
     load_calibration,
     measure_signature,
 )
-from repro.bridge.profiles import bridge_profiles, derive_profiles  # noqa: F401
+from repro.bridge.profiles import (  # noqa: F401
+    bridge_host_table,
+    bridge_profiles,
+    derive_host,
+    derive_profiles,
+)

@@ -36,7 +36,7 @@ from repro.cluster.job import JobProfile
 from repro.configs import families
 from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
 from repro.roofline import hw
-from repro.roofline.analysis import analytic_roofline
+from repro.roofline.analysis import analytic_host_profile, analytic_roofline
 
 # profiling cell: the production single-pod mesh on the train shape
 NUM_CHIPS = 256
@@ -118,8 +118,23 @@ def derive_profiles() -> Dict[str, JobProfile]:
     return {name: derive_profile(cfg) for name, cfg in families().items()}
 
 
-# memoized accessor for trace/pool integration (derivation is pure)
+def derive_host(cfg: ArchConfig) -> tuple[float, float, float, float]:
+    """One family's Synergy-style host-demand row ``(cpu_util, dram_util,
+    loader_util, host_sens)`` at the reference width, from the analytic
+    host model on the same profiling cell as ``derive_profile``.  Rounded
+    to 3 decimals: the values embed in co-location signatures, so they
+    must be short and reproduction-stable."""
+    shape = SHAPES[PROFILE_SHAPE]
+    roof = analytic_roofline(cfg, shape, NUM_CHIPS, microbatches=MICROBATCHES)
+    eff = ARCH_EFFICIENCY.get(cfg.family, 0.5)
+    step_s = max(roof.compute_s / eff, roof.memory_s) + roof.collective_s
+    cpu, dram, loader, sens = analytic_host_profile(cfg, shape, NUM_CHIPS, step_s)
+    return (round(cpu, 3), round(dram, 3), round(loader, 3), round(sens, 3))
+
+
+# memoized accessors for trace/pool integration (derivation is pure)
 _CACHE: Dict[str, JobProfile] = {}
+_HOST_CACHE: Dict[str, tuple[float, float, float, float]] = {}
 
 
 def bridge_profiles() -> Dict[str, JobProfile]:
@@ -127,3 +142,13 @@ def bridge_profiles() -> Dict[str, JobProfile]:
     if not _CACHE:
         _CACHE.update(derive_profiles())
     return dict(_CACHE)
+
+
+def bridge_host_table() -> Dict[str, tuple[float, float, float, float]]:
+    """Memoized host-demand row per model family (the bridge side of
+    ``trace.attach_host_profiles``'s lookup table)."""
+    if not _HOST_CACHE:
+        _HOST_CACHE.update(
+            {name: derive_host(cfg) for name, cfg in families().items()}
+        )
+    return dict(_HOST_CACHE)

@@ -27,6 +27,16 @@ INFLATION_BY_DEGREE: Dict[int, float] = {1: 1.0, 2: 1.035, 3: 1.082, 4: 1.20}
 # beyond the calibrated range: each extra co-resident adds ~8% switch cost
 EXTRA_PER_JOB = 0.08
 
+# --- disaggregated host resources (Synergy-style, arXiv 2110.06073) ---------
+# ``JobProfile`` host-demand fields, each in percent of one node's supply
+HOST_RESOURCES: Tuple[str, ...] = ("cpu_util", "dram_util", "loader_util")
+# one node's host supply per resource (demand percentages are vs this)
+HOST_SUPPLY = 100.0
+# admission hard cap on a node's combined host demand per resource: modest
+# oversubscription is allowed (the contention term prices its slowdown);
+# beyond this the input pipeline thrashes and the placement is infeasible
+HOST_OVERSUB_LIMIT = 130.0
+
 
 def combined_gpu_util(profiles: Sequence[JobProfile]) -> float:
     """Additive composition with saturation (Table 4 behaviour)."""
@@ -43,11 +53,12 @@ def combined_peak_mem(profiles: Sequence[JobProfile]) -> float:
     return min(100.0, sum(p.peak_mem_util for p in profiles))
 
 
-def inflation_factor(profiles: Sequence[JobProfile]) -> float:
-    """Epoch-time multiplier for a co-located set.
+def gpu_inflation_factor(profiles: Sequence[JobProfile]) -> float:
+    """GPU-only epoch-time multiplier for a co-located set.
 
     degree term (hardware context-switch overhead) x compute-oversubscription
-    term (jobs cannot jointly exceed the device's duty cycle).
+    term (jobs cannot jointly exceed the device's duty cycle).  This is the
+    pre-host model, kept verbatim: a host-blind scheduler predicts with it.
     """
     k = len(profiles)
     if k <= 1:
@@ -60,15 +71,74 @@ def inflation_factor(profiles: Sequence[JobProfile]) -> float:
     return base * max(1.0, demand)
 
 
+def host_contention_factor(profiles: Sequence[JobProfile]) -> float:
+    """Synergy-style host-contention multiplier for a co-located set.
+
+    For each host resource (CPU cores, DRAM bandwidth, dataloader
+    throughput), when the set's combined demand exceeds the node supply the
+    oversubscribed fraction stalls the set's input pipelines: the slowdown
+    is the overshoot scaled by the demand-weighted mean ``host_sens`` of
+    the set (jobs that barely touch the resource dilute the stall).  The
+    worst resource governs (pipelines stall on their tightest stage).
+
+    Exactly 1.0 when every profile's host fields are zero — the
+    absent==disabled contract: no new float ops reach the GPU-only model.
+    """
+    if len(profiles) <= 1:
+        return 1.0
+    worst = 0.0
+    for res in HOST_RESOURCES:
+        demand = 0.0
+        weighted = 0.0
+        for p in profiles:
+            d = getattr(p, res)
+            demand += d
+            weighted += d * p.host_sens
+        if demand > HOST_SUPPLY:
+            stall = (weighted / demand) * (demand / HOST_SUPPLY - 1.0)
+            if stall > worst:
+                worst = stall
+    if worst == 0.0:
+        return 1.0
+    return 1.0 + worst
+
+
+def inflation_factor(profiles: Sequence[JobProfile]) -> float:
+    """Epoch-time multiplier for a co-located set: the GPU-only model
+    (degree x compute-oversubscription) times the host-contention term.
+    Byte-identical to the GPU-only factor when host sensitivities are zero
+    (the host term is skipped, not multiplied in as 1.0)."""
+    base = gpu_inflation_factor(profiles)
+    host = host_contention_factor(profiles)
+    if host != 1.0:
+        base *= host
+    return base
+
+
 def epoch_hours_colocated(job: JobProfile, others: Sequence[JobProfile]) -> float:
     """``job``'s inflated epoch time when sharing with ``others``."""
     return job.epoch_hours * inflation_factor([job, *others])
 
 
+def _signature_tag(p: JobProfile) -> str:
+    """One profile's signature element: the family name, extended with the
+    host-demand fields when any is set.  Host demand scales with width, so
+    two same-family entries at different widths are distinct co-location
+    keys once host-aware — collapsing them would cross-contaminate the
+    history/memo tables.  Host-blind profiles keep the bare name."""
+    if p.cpu_util or p.dram_util or p.loader_util or p.host_sens:
+        return (
+            f"{p.name}#h{p.cpu_util!r},{p.dram_util!r},"
+            f"{p.loader_util!r},{p.host_sens!r}"
+        )
+    return p.name
+
+
 def set_signature(profiles: Iterable[JobProfile]) -> Tuple[str, ...]:
-    """Canonical (sorted family names) key of a co-located set — what the
-    history H, the calibration table and the inflation memos key on."""
-    return tuple(sorted(p.name for p in profiles))
+    """Canonical (sorted family names, host-extended when host demand is
+    present) key of a co-located set — what the history H, the calibration
+    table and the inflation memos key on."""
+    return tuple(sorted(_signature_tag(p) for p in profiles))
 
 
 def paper_measured_inflation(signature: Tuple[str, ...]) -> float | None:

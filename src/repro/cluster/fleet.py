@@ -55,6 +55,9 @@ class FleetState:
         "power_dirty",
         "freq",
         "state_code",
+        "host_cpu",
+        "host_dram",
+        "host_loader",
         "on_idle",
         "on_busy",
         "sleep_idle",
@@ -83,6 +86,12 @@ class FleetState:
         # numpy columns
         self.freq = np.ones(n, dtype=np.float64)
         self.state_code = np.zeros(n, dtype=np.int8)
+        # host-resource columns: per-node combined resident demand (percent
+        # of supply), mirroring Node.cpu_raw / dram_raw / loader_raw — kept
+        # in sync by on_residency like the GPU composites
+        self.host_cpu = np.zeros(n, dtype=np.float64)
+        self.host_dram = np.zeros(n, dtype=np.float64)
+        self.host_loader = np.zeros(n, dtype=np.float64)
         # state x idleness index sets
         self.on_idle: Set[int] = set()
         self.on_busy: Set[int] = set()
@@ -175,9 +184,13 @@ class FleetState:
     def on_residency(self, node, idleness_changed: bool) -> None:
         """A job was added to / removed from ``node``."""
         self.res_version += 1
-        self.elig[node.id] = None
-        self.parts[node.id] = None
-        self.power_dirty.add(node.id)
+        i = node.id
+        self.elig[i] = None
+        self.parts[i] = None
+        self.power_dirty.add(i)
+        self.host_cpu[i] = node.cpu_raw
+        self.host_dram[i] = node.dram_raw
+        self.host_loader[i] = node.loader_raw
         if idleness_changed:
             self._reclassify(node)
 
@@ -344,15 +357,27 @@ class FleetState:
         """(N, G) raw per-GPU peak memory utilization."""
         return self._build_matrices()[2]
 
-    def check_consistency(self) -> None:
+    def check_consistency(self, jobs=None) -> None:
         """Assert every index set / column matches the per-node ground
-        truth (test hook; O(fleet))."""
+        truth (test hook; O(fleet)).
+
+        With ``jobs`` (a ``{job id -> Job}`` map) the incrementally
+        maintained composites are additionally checked against a
+        from-scratch recompute: per-GPU ``util_raw``/``mem_raw``/
+        ``peak_raw`` resummed from ``gpu_residents`` and the node-level
+        host raws resummed from the resident set, each within 1e-9 —
+        the float-drift guard for the O(k) maintenance arithmetic."""
         for node in self.nodes:
             i = node.id
             idle = node.is_idle()
             expect_code = _STATE_TO_CODE[node.state]
             assert self.state_code[i] == expect_code, (i, node.state)
             assert self.freq[i] == node.freq, (i, node.freq)
+            assert self.host_cpu[i] == node.cpu_raw, (i, node.cpu_raw)
+            assert self.host_dram[i] == node.dram_raw, (i, node.dram_raw)
+            assert self.host_loader[i] == node.loader_raw, (i, node.loader_raw)
+            if jobs is not None:
+                self._check_composites(node, jobs)
             in_sets = [
                 i in self.on_idle,
                 i in self.on_busy,
@@ -379,3 +404,28 @@ class FleetState:
                 assert i not in self.odd_idle, i
                 members = self.idle_member.get(self._class_key(node))
                 assert members is None or i not in members, i
+
+    @staticmethod
+    def _check_composites(node, jobs) -> None:
+        """From-scratch recompute of one node's incrementally maintained
+        composites (GPU trio per GPU + node-level host raws), asserting
+        each within 1e-9 of the maintained value."""
+        for g in range(node.n_gpus):
+            u = m = pk = 0.0
+            for jid in node.gpu_residents[g]:
+                p = jobs[jid].profile
+                u += p.gpu_util
+                m += p.mem_util
+                pk += p.peak_mem_util
+            assert abs(node.util_raw[g] - u) <= 1e-9, (node.id, g, u)
+            assert abs(node.mem_raw[g] - m) <= 1e-9, (node.id, g, m)
+            assert abs(node.peak_raw[g] - pk) <= 1e-9, (node.id, g, pk)
+        cpu = dram = loader = 0.0
+        for jid in node._resident_count:
+            p = jobs[jid].profile
+            cpu += p.cpu_util
+            dram += p.dram_util
+            loader += p.loader_util
+        assert abs(node.cpu_raw - cpu) <= 1e-9, (node.id, cpu)
+        assert abs(node.dram_raw - dram) <= 1e-9, (node.id, dram)
+        assert abs(node.loader_raw - loader) <= 1e-9, (node.id, loader)

@@ -36,10 +36,28 @@ class JobProfile:
     # than the fleet-default ``GPUSku.speed`` claims.  Empty = use the
     # SKU's own default.
     sku_speed: Tuple[Tuple[str, float], ...] = ()
+    # --- disaggregated host (Synergy-style) demand, percent of one node's
+    # host supply at THIS width (demand scales with the input throughput,
+    # i.e. with the allocation width — ``elastic.scaling.reprofile`` and
+    # ``trace.attach_host_profiles`` re-reference it).  All-zero (the
+    # default) means host-blind: every host code path is byte-identical to
+    # the GPU-only model.
+    cpu_util: float = 0.0  # input-pipeline CPU cores, % of the node's tray
+    dram_util: float = 0.0  # host DRAM bandwidth (staging + preprocessing)
+    loader_util: float = 0.0  # dataloader (storage + decode) throughput
+    # fraction of this family's throughput that stalls proportionally when
+    # a host resource oversubscribes (0 = insensitive, compute-bound)
+    host_sens: float = 0.0
 
-    def speed_on(self, sku_name: Optional[str], default: float = 1.0) -> float:
-        """Throughput multiplier of this family on ``sku_name`` (``default``
-        = the SKU's fleet-wide speed when the family has no override)."""
+    def speed_on(self, sku_name: Optional[str], default: float) -> float:
+        """Throughput multiplier of this family on ``sku_name``.
+
+        ``default`` is the SKU's fleet-wide speed, consulted when the
+        family has no per-SKU override — it is REQUIRED: an implicit
+        ``default=1.0`` silently dropped the a100's 2x fleet speed whenever
+        a caller forgot to pass it (only ``Node.job_speed`` did), so
+        forgetting is now a loud ``TypeError`` instead of a 2x slowdown.
+        """
         if sku_name is None:
             return 1.0
         for name, s in self.sku_speed:
@@ -66,6 +84,13 @@ class JobProfile:
     def is_elastic(self) -> bool:
         """Whether the job accepts resizes (min width < max width)."""
         return self.min_width < self.max_width
+
+    @property
+    def has_host_demand(self) -> bool:
+        """True when any host-resource field is set (host-aware profile)."""
+        return bool(
+            self.cpu_util or self.dram_util or self.loader_util or self.host_sens
+        )
 
 
 def paper_profiles() -> Dict[str, JobProfile]:
@@ -99,6 +124,29 @@ def lm_profiles() -> Dict[str, JobProfile]:
     return {
         k: JobProfile(k, e, n, g, m, pm, 8) for k, (e, n, g, m, pm) in table.items()
     }
+
+
+# hand-calibrated host-resource profiles for the paper/lm families at the
+# reference width (8 GPUs): (cpu_util, dram_util, loader_util, host_sens),
+# demand in percent of one node's host supply.  Synergy's (arXiv 2110.06073)
+# characterization: image pipelines are dataloader/CPU-bound (AlexNet
+# famously input-starved), language models stream pre-tokenized data and
+# barely touch the host.  Applied by ``trace.attach_host_profiles`` — the
+# profiles returned by ``paper_profiles``/``lm_profiles`` stay host-blind
+# (all-zero) so every GPU-only code path is byte-identical by default.
+HOST_PROFILES: Dict[str, Tuple[float, float, float, float]] = {
+    "alexnet": (95.0, 60.0, 95.0, 0.85),
+    "resnet18": (80.0, 50.0, 75.0, 0.65),
+    "resnet50": (60.0, 45.0, 55.0, 0.50),
+    "vgg16": (45.0, 40.0, 40.0, 0.35),
+    "lm-small": (25.0, 30.0, 15.0, 0.30),
+    "lm-medium": (18.0, 35.0, 10.0, 0.20),
+    "lm-large": (12.0, 40.0, 8.0, 0.12),
+    "lm-moe": (22.0, 45.0, 12.0, 0.25),
+}
+# the width the HOST_PROFILES (and bridge host derivations) are referenced
+# at; demand scales linearly with width (more GPUs consume more input)
+HOST_REF_WIDTH = 8
 
 
 class JobState:

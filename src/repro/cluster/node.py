@@ -58,6 +58,9 @@ class Node:
         "util_raw",
         "mem_raw",
         "peak_raw",
+        "cpu_raw",
+        "dram_raw",
+        "loader_raw",
         "_resident_count",
         "fleet",
         "_power_cache",
@@ -101,6 +104,13 @@ class Node:
         self.util_raw: List[float] = [0.0] * n_gpus
         self.mem_raw: List[float] = [0.0] * n_gpus
         self.peak_raw: List[float] = [0.0] * n_gpus
+        # node-level host-resource composites (CPU cores / DRAM bandwidth /
+        # dataloader throughput are shared per node, not per GPU): summed
+        # resident demand in percent of supply, maintained in O(1) per
+        # residency change like the per-GPU columns above
+        self.cpu_raw = 0.0
+        self.dram_raw = 0.0
+        self.loader_raw = 0.0
         self._resident_count: Dict[int, int] = {}  # job id -> held GPUs
         self.fleet = None  # set by FleetState when owned by a simulator
         self._power_cache: Optional[Tuple[PowerModel, float]] = None
@@ -286,6 +296,10 @@ class Node:
             peak_raw[g] += pk
             held += 1
         self._resident_count[job.id] = held
+        # host demand is node-level: counted once per job, not per GPU
+        self.cpu_raw += p.cpu_util
+        self.dram_raw += p.dram_util
+        self.loader_raw += p.loader_util
         self._residency_changed(was_idle)
 
     def remove_job(self, job: Job) -> None:
@@ -302,7 +316,12 @@ class Node:
                 self.peak_raw[g] -= p.peak_mem_util
                 if not residents:  # squash float drift on empty GPUs
                     self.util_raw[g] = self.mem_raw[g] = self.peak_raw[g] = 0.0
+        self.cpu_raw -= p.cpu_util
+        self.dram_raw -= p.dram_util
+        self.loader_raw -= p.loader_util
         self._resident_count.pop(job.id, None)
+        if not self._resident_count:  # squash drift when the node empties
+            self.cpu_raw = self.dram_raw = self.loader_raw = 0.0
         self._residency_changed(was_idle)
 
     def is_idle(self) -> bool:

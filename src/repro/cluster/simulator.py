@@ -367,9 +367,27 @@ class Simulator:
 
         Feasibility = no memory oversubscription: adding the job must keep
         every chosen GPU's combined peak memory (excluding the job's own
-        current residency) within 100%.  Preference order: GPUs the job
-        already holds (cheap resize), then the least-loaded.
+        current residency) within 100%, and (for host-aware profiles) the
+        node's combined host demand within the oversubscription cap.
+        Preference order: GPUs the job already holds (cheap resize), then
+        the least-loaded.
         """
+        prof = job.profile
+        if prof.cpu_util or prof.dram_util or prof.loader_util:
+            # node-level host gate (skipped entirely for host-blind
+            # profiles): combined demand excluding the job's own residency
+            cpu, dram, loader = node.cpu_raw, node.dram_raw, node.loader_raw
+            if job.id in node._resident_count:
+                cpu -= prof.cpu_util
+                dram -= prof.dram_util
+                loader -= prof.loader_util
+            lim = colocation.HOST_OVERSUB_LIMIT
+            if (
+                cpu + prof.cpu_util > lim
+                or dram + prof.dram_util > lim
+                or loader + prof.loader_util > lim
+            ):
+                return None
         scored = []
         for g in range(node.n_gpus):
             others = [
@@ -419,6 +437,24 @@ class Simulator:
                 f"width {k} outside [{prof.min_width}, {prof.max_width}] "
                 f"for job {job.id} ({prof.name})"
             )
+        if prof.cpu_util or prof.dram_util or prof.loader_util:
+            # node-level host gate (skipped for host-blind profiles):
+            # migrating onto a host-saturated node would thrash its input
+            # pipeline — same cap the admission path enforces
+            cpu, dram, loader = target.cpu_raw, target.dram_raw, target.loader_raw
+            if job.id in target._resident_count:
+                cpu -= prof.cpu_util
+                dram -= prof.dram_util
+                loader -= prof.loader_util
+            lim = colocation.HOST_OVERSUB_LIMIT
+            if (
+                cpu + prof.cpu_util > lim
+                or dram + prof.dram_util > lim
+                or loader + prof.loader_util > lim
+            ):
+                raise ValueError(
+                    f"node {target.id} host demand oversubscribed by job {job.id}"
+                )
         for g in gpu_ids:
             others = [
                 self.jobs[i].profile

@@ -25,7 +25,14 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.cluster.job import Job, JobProfile, lm_profiles, paper_profiles
+from repro.cluster.job import (
+    HOST_PROFILES,
+    HOST_REF_WIDTH,
+    Job,
+    JobProfile,
+    lm_profiles,
+    paper_profiles,
+)
 from repro.elastic import scaling
 
 
@@ -160,6 +167,50 @@ def load_into(sim, trace: Sequence[Tuple[JobProfile, float, float]]) -> None:
     """Submit every trace entry to ``sim`` as an arrival event."""
     for prof, arrival, deadline in trace:
         sim.add_job(prof, arrival, deadline)
+
+
+def attach_host_profiles(
+    trace: Sequence[Tuple[JobProfile, float, float]],
+) -> List[Tuple[JobProfile, float, float]]:
+    """Copy of ``trace`` with Synergy-style host-resource demand attached.
+
+    Each profile whose family has a host characterization (the
+    hand-calibrated ``HOST_PROFILES`` table for the paper/lm families, the
+    roofline-derived bridge table for the calibrated model families —
+    imported lazily so pure-numpy traces never pay the configs/jax cost)
+    gains ``cpu_util``/``dram_util``/``loader_util`` scaled to its width
+    (host demand tracks input throughput, referenced at
+    ``HOST_REF_WIDTH``) plus its ``host_sens``.  Families with no host row
+    stay host-blind; an already host-aware profile is left untouched.
+    """
+    table: Dict[str, Tuple[float, float, float, float]] = dict(HOST_PROFILES)
+    bridge_loaded = False
+    out: List[Tuple[JobProfile, float, float]] = []
+    for prof, arrival, deadline in trace:
+        if prof.has_host_demand:
+            out.append((prof, arrival, deadline))
+            continue
+        row = table.get(prof.name)
+        if row is None and not bridge_loaded:
+            from repro.bridge import bridge_host_table
+
+            table.update(bridge_host_table())
+            bridge_loaded = True
+            row = table.get(prof.name)
+        if row is None:
+            out.append((prof, arrival, deadline))
+            continue
+        cpu, dram, loader, sens = row
+        ratio = prof.n_gpus / HOST_REF_WIDTH
+        prof = dataclasses.replace(
+            prof,
+            cpu_util=cpu * ratio,
+            dram_util=dram * ratio,
+            loader_util=loader * ratio,
+            host_sens=sens,
+        )
+        out.append((prof, arrival, deadline))
+    return out
 
 
 # --------------------------------------------------------- production traces
@@ -448,6 +499,12 @@ CSV_FIELDS = (
     "deadline_h",  # "inf" = no SLO
 )
 
+# optional host-demand columns (Synergy-style disaggregated resources):
+# always written by ``trace_to_csv``; ``trace_from_csv`` defaults a missing
+# column (pre-host CSVs) to 0.0 = host-blind, so old traces replay
+# byte-identically
+HOST_CSV_FIELDS = ("cpu_util", "dram_util", "loader_util", "host_sens")
+
 
 def _encode_sku_speed(sku_speed: Tuple[Tuple[str, float], ...]) -> str:
     # repr, like every other float column: the round-trip must be lossless
@@ -468,7 +525,7 @@ def trace_to_csv(trace: Sequence[Tuple[JobProfile, float, float]], path: str) ->
     """Write a trace in the replayable CSV schema (see README)."""
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(CSV_FIELDS)
+        w.writerow(CSV_FIELDS + HOST_CSV_FIELDS)
         for prof, arrival, deadline in trace:
             w.writerow(
                 [
@@ -485,6 +542,10 @@ def trace_to_csv(trace: Sequence[Tuple[JobProfile, float, float]], path: str) ->
                     _encode_sku_speed(prof.sku_speed),
                     repr(arrival),
                     "inf" if math.isinf(deadline) else repr(deadline),
+                    repr(prof.cpu_util),
+                    repr(prof.dram_util),
+                    repr(prof.loader_util),
+                    repr(prof.host_sens),
                 ]
             )
 
@@ -498,7 +559,11 @@ def trace_from_csv(path: str) -> List[Tuple[JobProfile, float, float]]:
     name must agree on the utilization columns; mixed-utilization rows
     under one name are rejected rather than silently cross-contaminating
     predictions.  Duration columns (``epochs``/``epoch_hours``/widths) may
-    vary freely per row.
+    vary freely per row, as may the optional ``HOST_CSV_FIELDS`` (host
+    demand scales with width, and the co-location signature extends itself
+    with the host values when they are set): a CSV without the host
+    columns loads with them at 0.0 — host-blind, byte-identical to the
+    pre-host loader.
     """
     out: List[Tuple[JobProfile, float, float]] = []
     util_by_name: Dict[str, Tuple[float, float, float]] = {}
@@ -532,6 +597,10 @@ def trace_from_csv(path: str) -> List[Tuple[JobProfile, float, float]]:
                 max_gpus=int(row["max_gpus"]),
                 scaling_c=float(row["scaling_c"]),
                 sku_speed=_decode_sku_speed(row["sku_speed"]),
+                cpu_util=float(row.get("cpu_util") or 0.0),
+                dram_util=float(row.get("dram_util") or 0.0),
+                loader_util=float(row.get("loader_util") or 0.0),
+                host_sens=float(row.get("host_sens") or 0.0),
             )
             out.append((prof, float(row["arrival_h"]), float(row["deadline_h"])))
     return out

@@ -40,6 +40,7 @@ import dataclasses
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 from repro.cluster import dvfs
+from repro.cluster.colocation import HOST_OVERSUB_LIMIT, HOST_SUPPLY
 from repro.cluster.job import Job
 from repro.cluster.node import Node, NodeState
 
@@ -63,6 +64,10 @@ class Candidate(NamedTuple):
     # the node's current relative DVFS frequency (1.0 = full clock);
     # ``speed`` and ``perf_per_watt`` already fold its slowdown in
     freq: float = 1.0
+    # worst post-placement host-resource overshoot past the node supply
+    # (percent points; 0.0 when within supply or host-blind) — host-aware
+    # rankers prefer placements that do not stall the input pipeline
+    host_over: float = 0.0
 
     @property
     def degree(self) -> int:
@@ -76,6 +81,12 @@ class Thresholds:
     mem: float = 80.0  # mem_threshold (Eq. 4)
     max_residents: int = 3  # co-location degree cap (4-way sharing measured
     # at +19-24% JCT; EaCO stays at <=4 jobs/GPU => 3 residents + newcomer)
+    # node-level cap on combined host demand per resource (percent of
+    # supply) after placement — the host-feasibility gate next to the
+    # peak-HBM check.  Always satisfied by host-blind profiles (0 <= cap),
+    # so the GPU-only candidate lists are byte-identical; ``math.inf``
+    # disables the gate (host-blind scheduling of a host-aware world).
+    host: float = HOST_OVERSUB_LIMIT
 
 
 def _job_speed_ppw(node, profile, default_pm) -> Tuple[float, float]:
@@ -118,6 +129,18 @@ def find_candidates_reference(
     seen = set()  # (node_id, gpu_ids) — dedup without O(|out|) scans
     k = width or job.profile.n_gpus
     need = job.profile.peak_mem_util * k
+    # host-feasibility gate (next to the peak-HBM ``need`` check): demand
+    # is node-level, so one comparison per node — not per GPU set.  All
+    # zeros for host-blind profiles: every gate passes, overshoot is 0.0.
+    cpu_d = job.profile.cpu_util
+    dram_d = job.profile.dram_util
+    load_d = job.profile.loader_util
+    host_cap = thresholds.host
+    if cpu_d > host_cap or dram_d > host_cap or load_d > host_cap:
+        return out  # the job alone busts the cap on any node
+    idle_over = max(
+        0.0, cpu_d - HOST_SUPPLY, dram_d - HOST_SUPPLY, load_d - HOST_SUPPLY
+    )
     for node in sim.nodes:
         if node.state == NodeState.FAILED:
             continue
@@ -125,18 +148,32 @@ def find_candidates_reference(
             continue
         if k > node.n_gpus:
             continue
-        speed, ppw = _job_speed_ppw(node, job.profile, sim.power)
         if node.is_idle():
             # fast path for the common empty node: every GPU is eligible at
             # zero load, so hot == cold == the first k GPUs
             if need <= 100.0 * k:
+                speed, ppw = _job_speed_ppw(node, job.profile, sim.power)
                 out.append(
                     Candidate(
                         node.id, tuple(range(k)), 0.0, (),
                         speed=speed, perf_per_watt=ppw, freq=node.freq,
+                        host_over=idle_over,
                     )
                 )
             continue
+        if (
+            node.cpu_raw + cpu_d > host_cap
+            or node.dram_raw + dram_d > host_cap
+            or node.loader_raw + load_d > host_cap
+        ):
+            continue  # placing here would thrash the input pipeline
+        speed, ppw = _job_speed_ppw(node, job.profile, sim.power)
+        host_over = max(
+            0.0,
+            node.cpu_raw + cpu_d - HOST_SUPPLY,
+            node.dram_raw + dram_d - HOST_SUPPLY,
+            node.loader_raw + load_d - HOST_SUPPLY,
+        )
         eligible = []
         residents_per = node.gpu_residents
         util_raw, peak_raw = node.util_raw, node.peak_raw
@@ -172,6 +209,7 @@ def find_candidates_reference(
                 Candidate(
                     node.id, gpu_ids, util, residents,
                     speed=speed, perf_per_watt=ppw, freq=node.freq,
+                    host_over=host_over,
                 )
             )
     return out
@@ -204,6 +242,18 @@ def find_candidates(
     default_pm = sim.power
     sku_speed, gpu_util = profile.sku_speed, profile.gpu_util
     spw_memo = fleet.speed_ppw
+    # host-feasibility gate — same expressions and placement as the
+    # reference scan (node-level, so it composes with the per-GPU caches
+    # without touching their keys); all-zero profiles always pass
+    cpu_d = profile.cpu_util
+    dram_d = profile.dram_util
+    load_d = profile.loader_util
+    host_cap = thresholds.host
+    if cpu_d > host_cap or dram_d > host_cap or load_d > host_cap:
+        return []  # the job alone busts the cap on any node
+    idle_over = max(
+        0.0, cpu_d - HOST_SUPPLY, dram_d - HOST_SUPPLY, load_d - HOST_SUPPLY
+    )
 
     # ---- idle node ids ----------------------------------------------------
     idle_ids: List[int] = []
@@ -253,18 +303,29 @@ def find_candidates(
             sp = spw_memo.get(spw_key)
             if sp is None:
                 sp = spw_memo[spw_key] = _job_speed_ppw(node, profile, default_pm)
-            append(Candidate(nid, base_gpus, 0.0, (), sp[0], sp[1], node._freq))
+            append(
+                Candidate(
+                    nid, base_gpus, 0.0, (), sp[0], sp[1], node._freq, idle_over
+                )
+            )
         elif bi < nb:
             nid = busy_ids[bi]
             bi += 1
             node = nodes[nid]
             if k > node.n_gpus:
                 continue
+            if (
+                node.cpu_raw + cpu_d > host_cap
+                or node.dram_raw + dram_d > host_cap
+                or node.loader_raw + load_d > host_cap
+            ):
+                continue  # placing here would thrash the input pipeline
             by_width = fparts[nid]
             parts = by_width.get(k) if by_width is not None else None
             if parts is None:
                 parts = fleet.cand_parts(node, k, thr_key)
             sp = None
+            host_over = 0.0
             for gpu_ids, avail, residents, util_sum in parts:
                 # memory feasibility: available >= estimated demand
                 if avail < need:
@@ -279,10 +340,16 @@ def find_candidates(
                         sp = spw_memo[spw_key] = _job_speed_ppw(
                             node, profile, default_pm
                         )
+                    host_over = max(
+                        0.0,
+                        node.cpu_raw + cpu_d - HOST_SUPPLY,
+                        node.dram_raw + dram_d - HOST_SUPPLY,
+                        node.loader_raw + load_d - HOST_SUPPLY,
+                    )
                 append(
                     Candidate(
                         nid, gpu_ids, util_sum / k, residents,
-                        sp[0], sp[1], node._freq,
+                        sp[0], sp[1], node._freq, host_over,
                     )
                 )
         else:

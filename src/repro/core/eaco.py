@@ -21,6 +21,7 @@ paper's §4/§6.2 attribute EaCO's energy savings to.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.cluster.job import Job, JobState
@@ -31,9 +32,17 @@ from repro.core.predictor import JCTPredictor
 from repro.elastic import scaling
 
 
-def _rank_key(c: Candidate) -> Tuple[float, float]:
+def _rank_key(c: Candidate) -> Tuple[float, float, float]:
     """EaCO's candidate sort key (shared by the full ``_rank`` sort and the
-    first-candidate fast path in ``schedule_job`` — both must agree)."""
+    first-candidate fast path in ``schedule_job`` — both must agree):
+    hottest first, then least host-oversubscribed, then best perf/watt.
+    ``host_over`` is a constant 0.0 for host-blind profiles, so the
+    GPU-only ordering is untouched."""
+    return (-c.utilization, c.host_over, -c.perf_per_watt)
+
+
+def _rank_key_blind(c: Candidate) -> Tuple[float, float]:
+    """The pre-host sort key — what a host-blind EaCO ranks with."""
     return (-c.utilization, -c.perf_per_watt)
 
 
@@ -63,10 +72,20 @@ class EaCO:
         history: Optional[History] = None,
         alpha: float = 0.5,
         queue_window: int = 0,
+        host_aware: bool = True,
     ):
         self.thresholds = thresholds or Thresholds()
+        # host_aware=False is the ablation arm for benchmarks: the
+        # scheduler ignores host demand entirely — no admission cap, the
+        # pre-host rank key, a host-blind analytic predictor — while the
+        # simulated world still pays the contention.  With host-blind
+        # profiles (all zeros) both modes are byte-identical.
+        self.host_aware = host_aware
+        if not host_aware:
+            self.thresholds = dataclasses.replace(self.thresholds, host=math.inf)
+        self._rank_fn = _rank_key if host_aware else _rank_key_blind
         self.history = history if history is not None else History()
-        self.predictor = JCTPredictor(self.history)
+        self.predictor = JCTPredictor(self.history, host_aware=host_aware)
         self.alpha = alpha
         # production-scale knob: only the first ``queue_window`` waiting
         # jobs are considered per pass (0 = unlimited, the paper setting).
@@ -81,9 +100,10 @@ class EaCO:
 
     def _rank(self, candidates: List[Candidate]) -> List[Candidate]:
         """Highest utilization first (Alg. 1 line 5); among equally hot
-        sets, prefer the SKU with the best perf/watt — on a heterogeneous
-        fleet the same packing decision is cheaper in joules there."""
-        return sorted(candidates, key=_rank_key)
+        sets, prefer less host oversubscription, then the SKU with the
+        best perf/watt — on a heterogeneous fleet the same packing
+        decision is cheaper in joules there."""
+        return sorted(candidates, key=self._rank_fn)
 
     def _admit(
         self, sim, job: Job, cand: Candidate, width: Optional[int] = None,
@@ -173,7 +193,7 @@ class EaCO:
             # minimal element, exactly like the stable sort's front — the
             # admission sequence (and its History side effects) is
             # identical to scanning the ranked list.
-            best = min(cands, key=_rank_key)
+            best = min(cands, key=self._rank_fn)
             if self._admit(sim, job, best, width):
                 cand = best
             else:
@@ -344,8 +364,9 @@ class EaCOOcc(EaCO):
         )
 
     def _rank(self, candidates: List[Candidate]) -> List[Candidate]:
-        # deeper packing first, then hottest, then best perf/watt
+        # deeper packing first, then hottest, then least host-
+        # oversubscribed (constant 0.0 when host-blind), then perf/watt
         return sorted(
             candidates,
-            key=lambda c: (-c.degree, -c.utilization, -c.perf_per_watt),
+            key=lambda c: (-c.degree, -c.utilization, c.host_over, -c.perf_per_watt),
         )

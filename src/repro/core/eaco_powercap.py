@@ -56,12 +56,14 @@ class EaCOPowerCap(EaCO):
         queue_window: int = 0,
         max_admission_slowdown: float = 1.12,
         candidate_limit: int = 8,
+        host_aware: bool = True,
     ):
         super().__init__(
             thresholds=thresholds,
             history=history,
             alpha=alpha,
             queue_window=queue_window,
+            host_aware=host_aware,
         )
         # never admit a job at a step that stretches ITS epochs beyond
         # this factor, deadline or not: no-SLO jobs would otherwise always

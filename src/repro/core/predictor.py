@@ -25,8 +25,12 @@ class JCTPredictor:
     """PredictJCT: estimates co-located finish times through the trust
     chain in the module docstring, width- and frequency-aware."""
 
-    def __init__(self, history: History):
+    def __init__(self, history: History, host_aware: bool = True):
         self.history = history
+        # host_aware=False models a host-blind scheduler in a host-aware
+        # world: the analytic fallback ignores host contention (measured
+        # history still corrects it after observation, as in reality)
+        self.host_aware = host_aware
 
     def predict_inflation(
         self, profiles: Sequence[JobProfile], count: bool = True
@@ -43,6 +47,8 @@ class JCTPredictor:
         calibrated = colocation.measured_inflation(sig)
         if calibrated is not None:
             return calibrated
+        if not self.host_aware:
+            return colocation.gpu_inflation_factor(profiles)
         return colocation.inflation_factor(profiles)
 
     def predict_finish(

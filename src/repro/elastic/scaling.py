@@ -76,12 +76,21 @@ def reprofile(profile: JobProfile, n_gpus: int, min_gpus: int = 0,
 
     The returned profile has ``epoch_hours`` consistent with the scaling
     curve, so a job generated at reference width 4 and later grown to 8
-    runs exactly as fast as one referenced at 8 all along.
+    runs exactly as fast as one referenced at 8 all along.  Host-resource
+    demand (input throughput) scales linearly with width; host-blind
+    profiles (all zeros) are replaced field-for-field unchanged.
     """
-    return dataclasses.replace(
-        profile,
+    changes = dict(
         epoch_hours=epoch_hours_at(profile, n_gpus),
         n_gpus=n_gpus,
         min_gpus=min_gpus or profile.min_gpus or n_gpus,
         max_gpus=max_gpus or profile.max_gpus or n_gpus,
     )
+    if profile.cpu_util or profile.dram_util or profile.loader_util:
+        ratio = n_gpus / profile.n_gpus
+        changes.update(
+            cpu_util=profile.cpu_util * ratio,
+            dram_util=profile.dram_util * ratio,
+            loader_util=profile.loader_util * ratio,
+        )
+    return dataclasses.replace(profile, **changes)

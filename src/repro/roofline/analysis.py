@@ -79,6 +79,7 @@ class CollectiveStats:
 
     @property
     def total_operand_bytes(self) -> int:
+        """Operand bytes summed over every collective op kind."""
         return sum(self.operand_bytes.values())
 
     @property
@@ -134,6 +135,7 @@ class Roofline:
     useful_ratio: float  # model_flops / HLO flops
 
     def summary(self) -> str:
+        """One-line human-readable roofline verdict (terms + bottleneck)."""
         return (
             f"compute={self.compute_s*1e3:.2f}ms memory={self.memory_s*1e3:.2f}ms "
             f"collective={self.collective_s*1e3:.2f}ms -> {self.bottleneck}-bound; "
@@ -147,6 +149,9 @@ def analyze(
     model_flops_global: float,
     num_chips: int,
 ) -> Roofline:
+    """Roofline terms for one compiled step: per-device compute / memory /
+    collective seconds from the XLA cost analysis + HLO collective scan,
+    with the largest term named as the bottleneck."""
     flops = float(cost.get("flops", 0.0))
     nbytes = float(cost.get("bytes accessed", 0.0))
     colls = parse_collectives(hlo_text)
@@ -291,6 +296,60 @@ def analytic_roofline(cfg, shape, num_chips: int, microbatches: int = 8) -> Roof
         model_flops=flops,
         useful_ratio=1.0,  # by construction: the analytic terms ARE model flops
     )
+
+
+# per-family-class input-pipeline weights, in text-equivalent tokens (the
+# unit of the ``hw.HOST_*_TOKENS_PER_S`` capacities): CPU preprocessing
+# cost per token and fetched/staged volume per token, both relative to
+# pre-tokenized text.  Vision/audio inputs decode raw media on the host,
+# which is what makes their families input-pipeline bound (Synergy §3).
+_HOST_CPU_WEIGHT = {
+    "dense": 1.0,
+    "moe": 1.0,
+    "ssm": 1.0,
+    "hybrid": 1.0,
+    "vlm": 10.0,
+    "audio": 6.0,
+}
+_HOST_IO_WEIGHT = {
+    "dense": 1.0,
+    "moe": 1.0,
+    "ssm": 1.0,
+    "hybrid": 1.0,
+    "vlm": 40.0,
+    "audio": 16.0,
+}
+
+
+def analytic_host_profile(
+    cfg, shape, num_chips: int, step_s: float
+) -> Tuple[float, float, float, float]:
+    """Synergy-style host-demand tuple ``(cpu_util, dram_util,
+    loader_util, host_sens)`` for one training cell, percent of one host
+    tray's supply at ``hw.CHIPS_PER_HOST`` chips (the cluster model's
+    reference width).
+
+    The input pipeline must sustain the cell's token consumption rate:
+    ``tokens/s per host = global_batch * seq_len / step_s / n_hosts``.
+    Each stage's demand is that rate (weighted by the family class's
+    per-token preprocessing cost and input volume) against the stage's
+    capacity; ``host_sens`` — the throughput fraction that stalls under
+    oversubscription — is how close the tightest stage runs to supply.
+    ``step_s`` is the cell's modeled step time (the bridge's
+    efficiency-adjusted roofline sum), which the caller already has.
+    """
+    if step_s <= 0.0:
+        raise ValueError(f"step_s must be positive, got {step_s}")
+    n_hosts = max(num_chips / hw.CHIPS_PER_HOST, 1.0)
+    tokens_per_s_host = shape.global_batch * shape.seq_len / step_s / n_hosts
+    cpu_w = _HOST_CPU_WEIGHT.get(cfg.family, 1.0)
+    io_w = _HOST_IO_WEIGHT.get(cfg.family, 1.0)
+    clamp = lambda x: min(100.0, max(0.0, x))  # noqa: E731
+    cpu = clamp(100.0 * tokens_per_s_host * cpu_w / hw.HOST_CPU_TOKENS_PER_S)
+    dram = clamp(100.0 * tokens_per_s_host * io_w / hw.HOST_DRAM_TOKENS_PER_S)
+    loader = clamp(100.0 * tokens_per_s_host * io_w / hw.HOST_LOADER_TOKENS_PER_S)
+    sens = min(0.95, max(0.05, max(cpu, dram, loader) / 100.0))
+    return cpu, dram, loader, sens
 
 
 def model_flops_for_cell(cfg, shape) -> float:

@@ -15,3 +15,12 @@ CHIP_PEAK_W = 220.0
 HOST_IDLE_W = 250.0  # per-host (CPU tray) idle
 HOST_PEAK_W = 450.0
 CHIPS_PER_HOST = 8
+
+# host input-pipeline capacity per tray (Synergy-style disaggregated
+# resources): sustained throughput of each pipeline stage at 100% of the
+# stage, in *text-equivalent tokens/s* — per-family weights in
+# ``roofline.analysis.analytic_host_profile`` rescale modality-heavy
+# inputs (image patches, audio frames) into this unit
+HOST_CPU_TOKENS_PER_S = 5.0e4  # tokenize / augment / batch / collate
+HOST_DRAM_TOKENS_PER_S = 1.2e5  # staging copies (fetch->pin->DMA chain)
+HOST_LOADER_TOKENS_PER_S = 8.0e4  # storage fetch + shard decode

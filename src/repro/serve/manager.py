@@ -193,6 +193,13 @@ class ServeManager:
         """Fold a burst of ``n`` requests into ``rep``'s fluid queue."""
         node = sim.nodes[rep.job.node_id]
         rate = rep.model.service_rate_rps(n, node.freq)
+        if rate <= 0.0 or not math.isfinite(rate):
+            # throttled-to-stall replica (deep DVFS floor): it cannot
+            # drain a ramp — re-pend the burst for the autoscaler's next
+            # tick instead of folding a divide-by-zero into the histogram
+            self._pending[rep.model.name].append((t_arrival, n))
+            self._pending_n += n
+            return
         start = max(t_arrival, rep.free_t_h)
         wait_s = (start - t_arrival) * 3600.0
         span_h = n / rate / 3600.0

@@ -44,6 +44,15 @@ SERVE_MEM_FRACTION = 0.30
 SERVE_PEAK_MEM_FRACTION = 0.45
 # default SLO: a multiple of the full-batch latency (p99-style headroom)
 SLO_LATENCY_MULT = 4.0
+# host-demand fractions of the training profile's host row: a replica
+# ingests single requests, not epoch-scale shard streams, so it taxes the
+# host far less than its training twin — but batched decode still
+# tokenizes/detokenizes on CPU and stages activations through host DRAM.
+# Zero training host demand derives zero serving demand (absent==disabled).
+SERVE_CPU_FRACTION = 0.5
+SERVE_DRAM_FRACTION = 0.5
+SERVE_LOADER_FRACTION = 0.1  # no dataset fetch; only request payloads
+SERVE_HOST_SENS_FRACTION = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +73,12 @@ class ServeModel:
     mem_util: float  # replica average HBM, percent
     peak_mem_util: float  # replica peak HBM (KV-cache high-water), percent
     sku_speed: Tuple[Tuple[str, float], ...] = ()  # per-SKU speedups
+    # replica host demand (percent of one node's host supply) and stall
+    # sensitivity — all-zero (default) keeps the replica host-blind
+    cpu_util: float = 0.0
+    dram_util: float = 0.0
+    loader_util: float = 0.0
+    host_sens: float = 0.0
 
     def __post_init__(self):
         if self.alpha_s <= 0 or self.beta_s <= 0:
@@ -107,6 +122,10 @@ class ServeModel:
             peak_mem_util=self.peak_mem_util,
             n_gpus=1,
             sku_speed=self.sku_speed,
+            cpu_util=self.cpu_util,
+            dram_util=self.dram_util,
+            loader_util=self.loader_util,
+            host_sens=self.host_sens,
         )
 
 
@@ -127,11 +146,18 @@ def model_from_profile(
     take the documented serving fractions of the training values.  The
     default SLO is ``SLO_LATENCY_MULT`` x the full-batch latency, so every
     derived model is servable-by-construction at low load.
+
+    Host demand: the replica's one-GPU share of the training profile's
+    host row (which is referenced at ``prof.n_gpus``), scaled by the
+    serving fractions.  A host-blind training profile (the default pools)
+    derives a host-blind replica — no clamp floor introduces demand from
+    nothing, preserving the absent==disabled contract end to end.
     """
     step_s = prof.epoch_hours * 3600.0 / STEPS_PER_EPOCH
     beta_s = max(step_s * REQUEST_COST_FRACTION, 1e-3)
     alpha_s = max(0.020, 0.5 * beta_s)
     lat_full = alpha_s + beta_s * max_batch
+    per_gpu = 1.0 / max(prof.n_gpus, 1)
     return ServeModel(
         name=prof.name,
         alpha_s=alpha_s,
@@ -144,6 +170,10 @@ def model_from_profile(
             prof.peak_mem_util * SERVE_PEAK_MEM_FRACTION, 3.0, 100.0
         ),
         sku_speed=prof.sku_speed,
+        cpu_util=prof.cpu_util * per_gpu * SERVE_CPU_FRACTION,
+        dram_util=prof.dram_util * per_gpu * SERVE_DRAM_FRACTION,
+        loader_util=prof.loader_util * per_gpu * SERVE_LOADER_FRACTION,
+        host_sens=prof.host_sens * SERVE_HOST_SENS_FRACTION,
     )
 
 

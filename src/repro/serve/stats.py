@@ -59,9 +59,23 @@ class LatencyHist:
     def fold_ramp(self, wait_s: float, rate_rps: float, n: int) -> None:
         """Fold ``n`` requests drained at ``rate_rps`` req/s after an
         initial wait of ``wait_s`` seconds: latencies are the uniform ramp
-        ``(wait_s, wait_s + n / rate_rps]``."""
+        ``(wait_s, wait_s + n / rate_rps]``.
+
+        ``rate_rps`` must be strictly positive and finite: a zero/negative
+        drain rate (a deep-DVFS-throttled replica) has no ramp — folding
+        ``n / rate_rps`` would either raise ``ZeroDivisionError`` or
+        poison ``sum_s``/``max_s`` with ``inf``, corrupting every later
+        quantile, so it is rejected loudly for the caller to handle.  The
+        ramp top is clamped to ``hi_s`` semantics by construction: the
+        overflow bucket absorbs everything above the last edge, while the
+        exact accumulators keep the true (unclamped, finite) values."""
         if n <= 0:
             return
+        if rate_rps <= 0.0 or not math.isfinite(rate_rps):
+            raise ValueError(
+                f"fold_ramp needs a positive finite drain rate, got "
+                f"rate_rps={rate_rps!r} (throttled-to-stall replica?)"
+            )
         span = n / rate_rps
         self._span_fold(wait_s, wait_s + span, float(n))
         self.total += n
@@ -116,9 +130,18 @@ class LatencyHist:
 
 def ramp_slo_violations(wait_s: float, rate_rps: float, n: int, slo_s: float) -> float:
     """Number of the ramp's ``n`` requests whose latency exceeds
-    ``slo_s`` — exact under the uniform-ramp model, in [0, n]."""
+    ``slo_s`` — exact under the uniform-ramp model, in [0, n].
+
+    Same guard as :meth:`LatencyHist.fold_ramp`: a non-positive or
+    non-finite drain rate has no ramp and raises ``ValueError`` instead of
+    dividing by zero or returning a NaN violation count."""
     if n <= 0:
         return 0.0
+    if rate_rps <= 0.0 or not math.isfinite(rate_rps):
+        raise ValueError(
+            f"ramp_slo_violations needs a positive finite drain rate, got "
+            f"rate_rps={rate_rps!r} (throttled-to-stall replica?)"
+        )
     span = n / rate_rps
     hi = wait_s + span
     if hi <= slo_s:

@@ -29,6 +29,7 @@ PACKAGES = (
     "repro.bridge",
     "repro.obs",
     "repro.serve",
+    "repro.roofline",
 )
 
 # names that look public but are inherited machinery / trivially documented

@@ -30,7 +30,12 @@ import sys
 import pytest
 
 from repro.cluster.simulator import SimConfig, Simulator
-from repro.cluster.trace import TraceConfig, generate_trace, load_into
+from repro.cluster.trace import (
+    TraceConfig,
+    attach_host_profiles,
+    generate_trace,
+    load_into,
+)
 from repro.core.baselines import FIFO, FIFOPacked, Gandiva
 from repro.core.eaco import EaCO
 from repro.core.eaco_elastic import EaCOElastic
@@ -98,6 +103,23 @@ def _run_family(name):
         colocation.clear_measured()
 
 
+def _run_family_host(name):
+    """EaCO / EaCO-PowerCap on the model-family trace with Synergy-style
+    host demand attached (``attach_host_profiles``): locks the host-aware
+    admission gate + contention pricing end to end.  Runs in the
+    analytic+noise universe (no calibration install — the measured tables
+    key on bare-name signatures, which host-aware profiles never hit)."""
+    trace = attach_host_profiles(generate_trace(FAMILY_TRACE))
+    if name == "eaco_powercap":
+        sim = Simulator(SimConfig(power_cap_w=POWERCAP_W, **SIM), EaCOPowerCap())
+    else:
+        sim = Simulator(SimConfig(**SIM), SCHEDULERS[name]())
+    load_into(sim, trace)
+    sim.run(until=100_000)
+    r = sim.results()
+    return {k: r[k] for k in TOLERANCES}
+
+
 def _load_golden():
     with open(GOLDEN_PATH) as f:
         return json.load(f)
@@ -132,6 +154,17 @@ def test_golden_family_metrics(name):
     )
 
 
+@pytest.mark.parametrize("name", ["eaco", "eaco_powercap"])
+def test_golden_family_host_metrics(name):
+    """The host-aware model-family replay is locked for the two EaCO
+    variants that price host contention in admission."""
+    _check(
+        _load_golden()["family_host"][name],
+        _run_family_host(name),
+        f"family_host/{name}",
+    )
+
+
 def _run_powercap():
     """EaCO-PowerCap on the paper trace under the 80% cluster power cap
     (the DVFS tentpole's golden): also locks that the cap held."""
@@ -161,6 +194,9 @@ def _regen():
         "schedulers": {name: _run(name) for name in sorted(SCHEDULERS)},
         "family_schedulers": {
             name: _run_family(name) for name in sorted(SCHEDULERS)
+        },
+        "family_host": {
+            name: _run_family_host(name) for name in ("eaco", "eaco_powercap")
         },
         "powercap_w": POWERCAP_W,
         "eaco_powercap": _run_powercap(),
