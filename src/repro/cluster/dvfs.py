@@ -33,6 +33,8 @@ import functools
 import math
 from typing import Dict, Optional, Tuple
 
+from repro.control import messages as ctl
+
 # Fraction of a job's throughput that tracks the core clock at full duty
 # cycle versus at zero duty cycle.  A job's compute-boundedness interpolates
 # between them on its ``gpu_util`` (MFU-style duty cycle): input- or
@@ -213,6 +215,15 @@ class PowerCapEnforcer:
                     out.append((node, ladder, step))
         return out
 
+    @staticmethod
+    def _submit_step(sim, node, step: int) -> None:
+        """Issue one ladder move as a ``throttle`` ScalePlan (the
+        enforcer's lever never re-targets: raise-backs stop at the
+        scheduler-chosen ``target_step``)."""
+        sim.control.submit(
+            ctl.ScalePlan("power-cap", (ctl.throttle(node.id, step),))
+        )
+
     # -- the enforcement pass ----------------------------------------------
 
     def enforce(self, sim) -> None:
@@ -236,7 +247,7 @@ class PowerCapEnforcer:
                 cands, key=lambda c: (self._node_slack_h(sim, c[0]), -c[0].id)
             )
             before = self._node_power(sim, node, node.freq)
-            sim._apply_freq_step(node, step - 1)
+            self._submit_step(sim, node, step - 1)
             total += self._node_power(sim, node, node.freq) - before
             self.throttle_count += 1
             if sim.telemetry is not None:
@@ -255,7 +266,7 @@ class PowerCapEnforcer:
             after = self._node_power(sim, node, ladder.freq(step + 1))
             if total - before + after > self.cap_w + 1e-9:
                 return  # no headroom for the riskiest raise: stop
-            sim._apply_freq_step(node, step + 1)
+            self._submit_step(sim, node, step + 1)
             total += after - before
             self.raise_count += 1
             if sim.telemetry is not None:

@@ -28,6 +28,8 @@ from repro.cluster.job import Job, JobProfile, JobState
 from repro.cluster.jobqueue import OrderedQueue
 from repro.cluster.node import Node, NodeState
 from repro.cluster.power import PowerModel, get_sku, v100_power_model
+from repro.control import messages as ctl
+from repro.control.plane import ControlPlane
 from repro.elastic import scaling
 from repro.obs.hub import TelemetryHub
 
@@ -169,6 +171,17 @@ class Simulator:
         self.serve = None
         self._serve_ids: Set[int] = set()
         self._serve_done = 0
+        # control plane (repro.control): the execution layer every
+        # decision component routes ScalePlans through, and the single
+        # entry point for NodeEvents (Poisson MTBF and scripted faults)
+        self.control = ControlPlane(self)
+        # node ids with a Poisson failure event currently in the heap —
+        # lets scripted and MTBF failures compose without double-arming
+        # (or orphaning) a node's failure chain
+        self._poisson_pending: Set[int] = set()
+        # jobs killed with a checkpoint-restore delay: QUEUED but held out
+        # of the wait queue until their ``requeue`` event fires
+        self._restoring: Set[int] = set()
         # event dispatch table (kind -> bound handler): collected from every
         # ``_ev_<kind>`` method so subclass handlers register automatically;
         # run() falls back to getattr for kinds pushed after construction
@@ -895,42 +908,148 @@ class Simulator:
     # --------------------------------------------------------------- failures
 
     def _schedule_failure(self, node: Node) -> None:
+        """Arm the node's Poisson MTBF failure chain (one event in flight
+        per node, tracked in ``_poisson_pending`` so scripted failures
+        compose — see ``_apply_node_event``)."""
         dt = float(self.rng.exponential(self.cfg.node_mtbf_hours))
+        self._poisson_pending.add(node.id)
         self.push(self.now + dt, "failure", {"node": node.id})
 
     def _ev_failure(self, payload):
         node = self.nodes[payload["node"]]
+        self._poisson_pending.discard(node.id)
         if node.state == NodeState.FAILED:
+            # a scripted failure took the node down first: nothing to
+            # kill, and the repair that brings it back re-arms the chain
+            # (the node is not in _poisson_pending anymore)
             return
-        self._account_node(node)
-        victims = [self.jobs[i] for i in node.resident_job_ids()]
-        for job in victims:
-            if job.id in self._serve_ids:
-                # replicas die with the node: their traffic re-pends and
-                # the autoscaler re-provisions on its next tick
-                self.serve.on_replica_failure(self, job)
-                continue
-            # involuntary undo: resume from the last epoch checkpoint
-            self.deallocate(job, to_queue=True, checkpoint=True, reason="failure")
-            job.restart_count += 1
-        node.state = NodeState.FAILED
-        self._power_dirty = True
-        self.push(self.now + self.cfg.node_repair_hours, "repair", {"node": node.id})
+        self.control.node_event(
+            ctl.NodeEvent(kind=ctl.FAIL, node_id=node.id, cause="mtbf")
+        )
 
     def _ev_repair(self, payload):
-        node = self.nodes[payload["node"]]
-        self._account_node(node)
-        node.state = NodeState.ON
-        self._dirty = True
-        self._power_dirty = True
-        node.slowdown = (
-            self.cfg.straggler_factor
-            if self.rng.random() < self.cfg.straggler_prob
-            else 1.0
+        self.control.node_event(
+            ctl.NodeEvent(
+                kind=ctl.REPAIR,
+                node_id=payload["node"],
+                cause=payload.get("cause", "mtbf") if payload else "mtbf",
+            )
         )
-        if self.cfg.node_mtbf_hours > 0:
-            self._schedule_failure(node)
-        self.scheduler.on_node_freed(self, node)
+
+    def _ev_node_event(self, payload):
+        """A scripted ``NodeEvent`` pushed into the heap (the
+        ``FaultInjector``'s arm path and ``LiveLoop.inject``)."""
+        self.control.node_event(payload)
+
+    def _ev_requeue(self, payload):
+        """Checkpoint-restore completed: the held-out victim re-enters
+        the wait queue at the front (it already waited its turn)."""
+        jid = payload["job"]
+        self._restoring.discard(jid)
+        job = self.jobs[jid]
+        if job.state != JobState.QUEUED or jid in self.queue:
+            return  # completed or re-queued through another path meanwhile
+        self.queue.insert(0, jid)
+        self._dirty = True
+
+    def _kill_training_job(self, job: Job, restore_delay_h: float, reason: str) -> None:
+        """Involuntary undo of one training victim: resume from the last
+        epoch checkpoint, immediately (legacy failure path) or after a
+        checkpoint-restore delay (the job sits in ``_restoring`` limbo —
+        QUEUED but not placeable — until its ``requeue`` event)."""
+        if restore_delay_h <= 0.0:
+            self.deallocate(job, to_queue=True, checkpoint=True, reason=reason)
+        else:
+            self.deallocate(job, to_queue=False, checkpoint=True, reason=reason)
+            job.state = JobState.QUEUED
+            self._restoring.add(job.id)
+            self.push(self.now + restore_delay_h, "requeue", {"job": job.id})
+        job.restart_count += 1
+
+    def _apply_node_event(self, ev) -> None:
+        """Execution-layer handler for one ``NodeEvent`` — the only fault
+        path (both the Poisson MTBF events and scripted scenarios land
+        here, via ``ControlPlane.node_event``).
+
+        Composition rules: a ``fail`` on an already-FAILED node and a
+        ``repair`` on a non-FAILED node are no-ops (scripted and Poisson
+        streams never double-kill or double-repair); a repair re-arms the
+        Poisson chain only when no failure event is already in flight for
+        the node.  Only ``cause == "mtbf"`` repairs draw from the
+        simulator RNG (the legacy straggler draw) — scripted events are
+        fully deterministic.
+        """
+        node = self.nodes[ev.node_id]
+        if ev.kind == ctl.FAIL:
+            if node.state == NodeState.FAILED:
+                return  # already down: scripted + Poisson compose, no double kill
+            self._account_node(node)
+            victims = [self.jobs[i] for i in node.resident_job_ids()]
+            for job in victims:
+                if job.id in self._serve_ids:
+                    # replicas die with the node: their traffic re-pends and
+                    # the autoscaler re-provisions on its next tick
+                    self.serve.on_replica_failure(self, job)
+                    continue
+                # involuntary undo: resume from the last epoch checkpoint
+                self._kill_training_job(job, ev.restore_delay_h, "failure")
+            node.state = NodeState.FAILED
+            self._power_dirty = True
+            repair_h = (
+                ev.repair_h if ev.repair_h is not None else self.cfg.node_repair_hours
+            )
+            if math.isfinite(repair_h):
+                self.push(
+                    self.now + repair_h,
+                    "repair",
+                    {"node": node.id, "cause": ev.cause},
+                )
+        elif ev.kind == ctl.REPAIR:
+            if node.state != NodeState.FAILED:
+                return  # stale: a scripted repair already brought it back
+            self._account_node(node)
+            node.state = NodeState.ON
+            self._dirty = True
+            self._power_dirty = True
+            if ev.cause == "mtbf":
+                node.slowdown = (
+                    self.cfg.straggler_factor
+                    if self.rng.random() < self.cfg.straggler_prob
+                    else 1.0
+                )
+            else:
+                node.slowdown = ev.factor
+            if self.cfg.node_mtbf_hours > 0 and node.id not in self._poisson_pending:
+                self._schedule_failure(node)
+            self.scheduler.on_node_freed(self, node)
+        elif ev.kind == ctl.PREEMPT:
+            if node.state != NodeState.ON:
+                return  # nothing runs on a failed/sleeping node
+            self._account_node(node)
+            if ev.job_ids:
+                victims = [
+                    self.jobs[j]
+                    for j in ev.job_ids
+                    if self.jobs[j].node_id == node.id
+                    and j not in self._serve_ids
+                ]
+            else:
+                victims = [
+                    self.jobs[i]
+                    for i in node.resident_job_ids()
+                    if i not in self._serve_ids
+                ]
+            for job in victims:
+                self._kill_training_job(job, ev.restore_delay_h, "preempt")
+        elif ev.kind == ctl.STRAGGLE:
+            if node.state == NodeState.FAILED:
+                return  # degradation is moot while the node is down
+            self._account_node(node)
+            node.slowdown = ev.factor
+            self._rerate(node)
+            self._dirty = True  # the Brain may migrate off the slow node
+        else:  # pragma: no cover - messages.NodeEvent validates kinds
+            raise ValueError(f"unknown NodeEvent kind {ev.kind!r}")
 
     def _ev_retry(self, _):
         # a scheduler-requested wake-up (e.g. a narrow-admission patience

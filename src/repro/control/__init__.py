@@ -1,0 +1,37 @@
+"""``repro.control`` — the explicit control plane (see docs/control-plane.md).
+
+The DLRover-style operator API between the decision layer (schedulers,
+elastic Brain, power-cap enforcer, serve autoscaler) and the execution
+layer: decisions travel as :class:`~repro.control.messages.ScalePlan`
+messages into the :class:`~repro.control.plane.ControlPlane`, faults
+travel as :class:`~repro.control.messages.NodeEvent` records out of the
+:class:`~repro.control.injector.FaultInjector` (or the simulator's own
+Poisson MTBF chain), and the same Brain drives either the batch
+:class:`~repro.cluster.simulator.Simulator` or the real-time
+:class:`~repro.control.live.LiveLoop` with byte-identical plans.
+"""
+
+from repro.control.injector import (
+    Fault,
+    FaultInjector,
+    Scenario,
+    SCENARIOS,
+    SMOKE_SCENARIOS,
+)
+from repro.control.live import LiveLoop, run_live
+from repro.control.messages import NodeEvent, ScaleAction, ScalePlan
+from repro.control.plane import ControlPlane
+
+__all__ = [
+    "ControlPlane",
+    "Fault",
+    "FaultInjector",
+    "LiveLoop",
+    "NodeEvent",
+    "Scenario",
+    "SCENARIOS",
+    "SMOKE_SCENARIOS",
+    "ScaleAction",
+    "ScalePlan",
+    "run_live",
+]

@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.cluster import colocation
 from repro.cluster.job import Job, JobState
 from repro.cluster.node import Node, NodeState
+from repro.control import messages as ctl
 
 
 class _Base:
@@ -78,7 +79,9 @@ class _Base:
                 len(gpu_ids), len(residents), 0, node.freq,
                 1.0, realized, finish,
             )
-        sim.allocate(job, node.id, gpu_ids)
+        sim.control.submit(
+            ctl.ScalePlan(self.name, (ctl.place(job.id, node.id, gpu_ids),))
+        )
 
 
 class FIFO(_Base):

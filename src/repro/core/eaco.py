@@ -26,6 +26,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.cluster.job import Job, JobState
 from repro.cluster.node import Node, NodeState
+from repro.control import messages as ctl
 from repro.core.candidates import Candidate, Thresholds, find_candidates
 from repro.core.history import History
 from repro.core.predictor import JCTPredictor
@@ -206,7 +207,13 @@ class EaCO:
             cand = self._choose(sim, job, self._rank(cands), width)
         if cand is None:
             return False
-        sim.allocate(job, cand.node_id, cand.gpu_ids)
+        # the placement decision leaves as a ScalePlan message: the control
+        # plane is the only component that mutates allocation state
+        sim.control.submit(
+            ctl.ScalePlan(
+                self.name, (ctl.place(job.id, cand.node_id, cand.gpu_ids),)
+            )
+        )
         if cand.resident_ids:
             # tentative: observe one epoch of every co-located job
             job.state = JobState.OBSERVING

@@ -31,6 +31,7 @@ from typing import List, Optional
 
 from repro.cluster import dvfs
 from repro.cluster.job import Job
+from repro.control import messages as ctl
 from repro.core.candidates import Candidate, Thresholds
 from repro.core.eaco import EaCO
 from repro.core.history import History
@@ -167,7 +168,13 @@ class EaCOPowerCap(EaCO):
         return best[1]
 
     def _on_placed(self, sim, job: Job, cand: Candidate) -> None:
-        """Apply the frequency step the winning score was computed at."""
+        """Apply the frequency step the winning score was computed at
+        (as a ScalePlan: the step re-target is a scheduler decision)."""
         if self._chosen_step is not None:
-            sim.set_frequency(cand.node_id, self._chosen_step)
+            sim.control.submit(
+                ctl.ScalePlan(
+                    self.name,
+                    (ctl.set_freq(cand.node_id, self._chosen_step),),
+                )
+            )
             self._chosen_step = None

@@ -1,22 +1,27 @@
-"""Applies Brain plans to the simulator through the resize event queue.
+"""Applies Brain plans to the simulator through the control plane.
 
-The controller is the only component that mutates state: it takes the
-Brain's ranked plans and issues ``Simulator.request_resize`` calls, which
-land each resize on the job's next epoch boundary (checkpoint-safe).  It
-also keeps per-plan accounting so benchmarks can report what the elastic
+The controller is the only component that turns Brain proposals into
+mutations: each accepted :class:`~repro.elastic.brain.Plan` becomes a
+one-action ``resize`` :class:`~repro.control.messages.ScalePlan`
+submitted to ``sim.control``, which lands it on the job's next epoch
+boundary via ``Simulator.request_resize`` (checkpoint-safe).  It also
+keeps per-plan accounting so benchmarks can report what the elastic
 layer actually did versus what it predicted.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
+from repro.control import messages as ctl
 from repro.elastic.brain import Brain, Plan
 
 
 @dataclasses.dataclass
 class ControllerStats:
+    """Issue/reject accounting across every ``step`` call."""
+
     issued: int = 0
     rejected: int = 0  # request_resize refused (pending/terminal/rate-less)
     by_kind: Dict[str, int] = dataclasses.field(
@@ -26,8 +31,8 @@ class ControllerStats:
 
 
 class ElasticController:
-    """Applies Brain plans through ``Simulator.request_resize`` (the only
-    mutation path), keeping issue/reject accounting per plan kind."""
+    """Translates Brain plans into ``resize`` ScalePlans on ``sim.control``
+    (the only mutation path), keeping issue/reject accounting per kind."""
 
     def __init__(self, brain: Brain, max_actions_per_step: int = 2):
         self.brain = brain
@@ -43,13 +48,24 @@ class ElasticController:
             issued = False
             if len(applied) < self.max_actions_per_step:
                 job = sim.jobs[plan.job_id]
-                node_id = plan.node_id if plan.node_id != job.node_id else None
-                if sim.request_resize(
-                    job,
-                    plan.width,
-                    node_id=node_id,
-                    expect_residents=plan.co_resident_ids,
-                ):
+                # -1 = stay on the current node (migrations carry a target)
+                node_id = plan.node_id if plan.node_id != job.node_id else -1
+                msg = ctl.ScalePlan(
+                    "brain",
+                    (
+                        ctl.resize(
+                            plan.job_id,
+                            plan.width,
+                            node_id=node_id,
+                            expect=(
+                                None
+                                if plan.co_resident_ids is None
+                                else tuple(plan.co_resident_ids)
+                            ),
+                        ),
+                    ),
+                )
+                if sim.control.submit(msg):
                     issued = True
                     applied.append(plan)
                     self.stats.issued += 1

@@ -106,6 +106,20 @@ def to_perfetto(hub, results: Optional[Dict[str, Any]] = None) -> Dict[str, Any]
                 "ts": _us(row["t"]),
             }
         )
+    # injected/MTBF faults on their node's track (straggles carry the
+    # installed slowdown so traces show degraded-node spans at a glance)
+    for row in hub.node_events.rows():
+        name = f"{row['kind']}:{row['cause']}"
+        if row["kind"] == "straggle" or (
+            row["kind"] == "repair" and row["factor"] != 1.0
+        ):
+            name += f" x{row['factor']:.2f}"
+        events.append(
+            {
+                "ph": "i", "s": "p", "pid": row["node_id"] + 1, "tid": 0,
+                "name": name, "cat": "fault", "ts": _us(row["t"]),
+            }
+        )
 
     trace: Dict[str, Any] = {
         "traceEvents": events,

@@ -25,6 +25,9 @@ Tables (see ``docs/observability.md`` for the full schema):
   ``brain_rounds`` Brain proposal-round summaries
   ``serve``        serving events: routed batches, autoscaler scale
                    up/down, evictions, drains, shed traffic
+  ``node_events``  fleet faults through the control plane: failures,
+                   repairs, preemptions, straggler degradations (both
+                   Poisson MTBF and injected scenarios)
 """
 
 from __future__ import annotations
@@ -141,6 +144,9 @@ class TelemetryHub:
             ("t", "considered", "proposed", "best_saving_kwh")
         )
         self.serve = ColumnTable(("t", "kind", "model", "node_id", "value"))
+        self.node_events = ColumnTable(
+            ("t", "kind", "node_id", "cause", "factor", "detail")
+        )
         self.audit: Optional[DecisionAudit] = (
             DecisionAudit() if self.cfg.audit else None
         )
@@ -239,6 +245,22 @@ class TelemetryHub:
         shed; ``node_id=-1`` for fleet-wide events)."""
         self.serve.append(t, kind, model, node_id, value)
 
+    def node_event(
+        self,
+        t: float,
+        kind: str,
+        node_id: int,
+        cause: str,
+        factor: float,
+        detail: str = "",
+    ) -> None:
+        """Append one control-plane ``NodeEvent`` (``fail`` / ``repair`` /
+        ``preempt`` / ``straggle``); ``cause`` is ``mtbf`` for the
+        simulator's own Poisson failures, ``scripted`` for injected
+        scenario faults, and ``factor`` the slowdown a straggle/repair
+        installs."""
+        self.node_events.append(t, kind, node_id, cause, factor, detail)
+
     # ------------------------------------------------------------- reading
 
     def tables(self) -> Dict[str, ColumnTable]:
@@ -253,6 +275,7 @@ class TelemetryHub:
             "plans": self.plans,
             "brain_rounds": self.brain_rounds,
             "serve": self.serve,
+            "node_events": self.node_events,
         }
         if self.audit is not None:
             out["decisions"] = self.audit.decisions

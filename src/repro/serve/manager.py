@@ -37,8 +37,10 @@ import dataclasses
 import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.cluster import colocation
 from repro.cluster.job import Job, JobState
 from repro.cluster.node import NodeState
+from repro.control import messages as ctl
 from repro.core.candidates import Thresholds, find_candidates
 from repro.serve.models import ServeModel
 from repro.serve.stats import LatencyHist, ramp_slo_violations
@@ -189,6 +191,24 @@ class ServeManager:
         # least backlog first; job id breaks ties deterministically
         return (r.free_t_h, r.job.id)
 
+    @staticmethod
+    def _evict_key(sim, r: Replica) -> Tuple[float, float, int]:
+        """Eviction order under pressure: replicas on host-oversubscribed
+        nodes first (freeing them relieves the input-pipeline contention
+        every training co-resident pays), then least backlog, then job id.
+        ``host_over`` mirrors the admission ranker's definition — demand
+        beyond one node's supply per host resource — and is a constant
+        0.0 on host-blind fleets, so the GPU-only order is untouched
+        there."""
+        node = sim.nodes[r.job.node_id]
+        over = max(
+            0.0,
+            node.cpu_raw - colocation.HOST_SUPPLY,
+            node.dram_raw - colocation.HOST_SUPPLY,
+            node.loader_raw - colocation.HOST_SUPPLY,
+        )
+        return (-over, r.free_t_h, r.job.id)
+
     def _serve_on(self, sim, rep: Replica, t_arrival: float, n: int) -> None:
         """Fold a burst of ``n`` requests into ``rep``'s fluid queue."""
         node = sim.nodes[rep.job.node_id]
@@ -325,7 +345,11 @@ class ServeManager:
             return False
         self._consec_up_failures[family] = 0
         job = sim.register_serve_job(model.profile())
-        sim.allocate(job, chosen.node_id, chosen.gpu_ids)
+        sim.control.submit(
+            ctl.ScalePlan(
+                "serve", (ctl.place(job.id, chosen.node_id, chosen.gpu_ids),)
+            )
+        )
         rep = Replica(job, model, sim.now)
         self.replicas[job.id] = rep
         self.model_replicas[family].append(rep)
@@ -368,7 +392,13 @@ class ServeManager:
             sim.telemetry.serve_event(
                 sim.now, reason, fam, job.node_id, float(job.id)
             )
-        sim.deallocate(job, to_queue=False, checkpoint=False, reason=reason)
+        sim.control.submit(
+            ctl.ScalePlan(
+                "serve",
+                (ctl.evict(job.id, to_queue=False, checkpoint=False,
+                           reason=reason),),
+            )
+        )
         sim.retire_serve_job(job)
         self._replica_hours += sim.now - self._place_t.pop(job.id, sim.now)
         self._retired_jobs.append(job)
@@ -412,8 +442,11 @@ class ServeManager:
         train_pressed = self._pressure_carry and wait_h > self.cfg.evict_wait_h
         if not (cap_pressed or train_pressed) or not self.replicas:
             return
-        # the least-backlogged replica is the cheapest to give back
-        victim = min(self.replicas.values(), key=self._route_key)
+        # host-saturated hosts first, then the least-backlogged replica
+        # (the cheapest to give back)
+        victim = min(
+            self.replicas.values(), key=lambda r: self._evict_key(sim, r)
+        )
         self.evict_count += 1
         self._retire(sim, victim, "evict")
         self._no_up_until = (

@@ -30,6 +30,7 @@ PACKAGES = (
     "repro.obs",
     "repro.serve",
     "repro.roofline",
+    "repro.control",
 )
 
 # names that look public but are inherited machinery / trivially documented

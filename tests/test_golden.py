@@ -183,6 +183,29 @@ def test_golden_powercap_metrics():
     _check(_load_golden()["eaco_powercap"], _run_powercap(), "eaco_powercap")
 
 
+def _run_chaos():
+    """EaCO-Elastic on the paper trace under the ``mixed`` fault scenario
+    (ISSUE 10): locks the 100-job-with-faults replay — preemptions, node
+    flaps, stragglers, a rack failure, and checkpoint-restore delays all
+    land through the control plane and every job still finishes."""
+    from repro.control import FaultInjector
+
+    sim = Simulator(SimConfig(**SIM), EaCOElastic())
+    load_into(sim, generate_trace(TRACE))
+    injector = FaultInjector.from_name("mixed", SIM["n_nodes"], seed=0)
+    injector.arm(sim)
+    sim.run(until=100_000)
+    r = sim.results()
+    assert r["jobs_done"] == r["jobs_total"]
+    return {k: r[k] for k in TOLERANCES}
+
+
+def test_golden_chaos_metrics():
+    """The mixed-fault chaos replay is locked too (the control-plane
+    refactor must not silently drift fault handling)."""
+    _check(_load_golden()["chaos_mixed"], _run_chaos(), "chaos_mixed")
+
+
 def _regen():
     payload = {
         "trace": {"n_jobs": TRACE.n_jobs, "seed": TRACE.seed,
@@ -200,6 +223,7 @@ def _regen():
         },
         "powercap_w": POWERCAP_W,
         "eaco_powercap": _run_powercap(),
+        "chaos_mixed": _run_chaos(),
     }
     with open(GOLDEN_PATH, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)

@@ -377,3 +377,80 @@ def test_unplaceable_family_sheds_instead_of_spinning():
     assert s["dropped_requests"] == 25
     assert s["slo_violations"] >= 25
     assert not mgr.active()
+
+
+def test_pressure_evicts_host_saturated_replica_first():
+    """Host-aware eviction regression (ISSUE 10 satellite): under training
+    pressure the victim must be the replica on the host-oversubscribed
+    node, even when a replica elsewhere has *less* backlog.  The pre-fix
+    key ``(free_t_h, job.id)`` picked the least-backlogged replica and
+    left the input-pipeline contention in place."""
+    import dataclasses
+
+    from repro.cluster.simulator import SimConfig as _SC
+    from repro.control import messages as ctl
+    from repro.serve.manager import Replica
+
+    class _Idle:
+        name = "idle"
+        sleeps_idle_nodes = False
+
+        def try_schedule(self, sim):
+            pass
+
+        def on_arrival(self, sim, job):
+            pass
+
+        def on_epoch(self, sim, job):
+            pass
+
+        def on_complete(self, sim, job):
+            pass
+
+        def on_node_freed(self, sim, node):
+            pass
+
+    sim = Simulator(_SC(n_nodes=2, seed=0), _Idle())
+    models = _models(families=("lm-small",))
+    mgr = ServeManager(
+        ServeConfig(models=models, evict_wait_h=0.1)
+    ).attach(sim)
+    model = mgr.by_model["lm-small"]
+    # a host-heavy trainer oversubscribes node 0's host tray (cpu 120 >
+    # HOST_SUPPLY 100); node 1 stays host-light
+    heavy = dataclasses.replace(
+        _pool()["resnet50"], cpu_util=120.0, dram_util=40.0, loader_util=40.0
+    )
+    trainer = sim.add_job(heavy, 0.0, math.inf)
+    # a second queued job that starves -> training pressure
+    sim.add_job(_pool()["vgg16"], 0.0, math.inf)
+    sim.run(until=0.0)
+    sim.control.submit(
+        ctl.ScalePlan("test", (ctl.place(trainer.id, 0, (0, 1, 2, 3)),))
+    )
+    assert sim.nodes[0].cpu_raw > colocation.HOST_SUPPLY
+    reps = {}
+    for node_id in (0, 1):
+        job = sim.register_serve_job(model.profile())
+        sim.control.submit(
+            ctl.ScalePlan("test", (ctl.place(job.id, node_id, (7,)),))
+        )
+        rep = Replica(job, model, sim.now)
+        mgr.replicas[job.id] = rep
+        mgr.model_replicas["lm-small"].append(rep)
+        mgr._place_t[job.id] = sim.now
+        reps[node_id] = rep
+    sim.run(until=2.0)  # let the queued trainer's wait exceed evict_wait_h
+    assert sim.now > 0.1
+    # the host-saturated node's replica carries MORE backlog: the pre-fix
+    # least-backlog key would evict the node-1 replica instead
+    reps[0].free_t_h = sim.now + 2.0
+    reps[1].free_t_h = sim.now
+    key0 = mgr._evict_key(sim, reps[0])
+    key1 = mgr._evict_key(sim, reps[1])
+    assert key0 < key1, (key0, key1)
+    mgr._pressure_carry = True
+    mgr._handle_pressure(sim)
+    assert mgr.evict_count == 1
+    assert reps[0].job.id not in mgr.replicas  # host-saturated one evicted
+    assert reps[1].job.id in mgr.replicas
